@@ -1,0 +1,75 @@
+"""Kernel microbenchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode, so
+wall-clock numbers measure the JAX reference paths (the kernels' TPU
+performance is covered by the §Roofline analysis); the derived column
+reports the max |kernel - oracle| error, which must stay tiny."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.resource_allocation import solve_exact, solve_fixed_point
+from repro.core.cost_model import ra_constants
+from repro.core.scenario import make_scenario
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, n=10):
+    fn(*args)  # warm
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e6
+
+
+def run(report):
+    rng = jax.random.key(0)
+    ks = jax.random.split(rng, 8)
+
+    q = jax.random.normal(ks[0], (2, 512, 8, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 512, 4, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 512, 4, 64), jnp.float32)
+    out = ops.flash_attention(q, k, v, True, 128, 128)
+    err = float(jnp.max(jnp.abs(out - ref.flash_attention_ref(q, k, v))))
+    us = _time(jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c)),
+               q, k, v)
+    report("kernel/flash_attention/ref_us", us, f"maxerr={err:.2e}")
+
+    x = jax.random.normal(ks[3], (4096, 1024))
+    sc = jnp.ones((1024,))
+    err = float(jnp.max(jnp.abs(ops.rmsnorm(x, sc) - ref.rmsnorm_ref(x, sc))))
+    us = _time(jax.jit(ref.rmsnorm_ref), x, sc)
+    report("kernel/rmsnorm/ref_us", us, f"maxerr={err:.2e}")
+
+    u = jax.random.normal(ks[4], (32, 1 << 16))
+    w = jax.random.uniform(ks[5], (32,)) + 0.1
+    err = float(jnp.max(jnp.abs(ops.hier_aggregate(u, w)
+                                - ref.hier_aggregate_ref(u, w))))
+    us = _time(jax.jit(ref.hier_aggregate_ref), u, w)
+    report("kernel/hier_aggregate/ref_us", us, f"maxerr={err:.2e}")
+
+    states = jax.random.normal(ks[6], (16, 2, 8, 64, 32))
+    decay = jax.random.uniform(ks[7], (16, 2, 8), minval=0.5, maxval=1.0)
+    ent, fin = ops.ssd_state_scan(states, decay)
+    ent_r, fin_r = ref.ssd_state_scan_ref(states, decay)
+    err = max(float(jnp.max(jnp.abs(ent - ent_r))),
+              float(jnp.max(jnp.abs(fin - fin_r))))
+    us = _time(jax.jit(lambda s, d: ref.ssd_state_scan_ref(s, d)[1]),
+               states, decay)
+    report("kernel/ssd_state_scan/ref_us", us, f"maxerr={err:.2e}")
+
+    # resource-allocation solver throughput (the scheduler's hot loop)
+    sc2 = make_scenario(64, 4, seed=0)
+    c = ra_constants(sc2.dev, sc2.srv.bandwidth[0], sc2.srv.noise[0], sc2.lp)
+    mask = jnp.arange(64) < 48
+    us = _time(lambda: jax.block_until_ready(solve_fixed_point(c, mask).cost))
+    report("solver/fixed_point_us", us,
+           f"cost={float(solve_fixed_point(c, mask).cost):.2f}")
+    us = _time(lambda: jax.block_until_ready(solve_exact(c, mask).cost), n=3)
+    report("solver/exact_us", us,
+           f"cost={float(solve_exact(c, mask).cost):.2f}")

@@ -1,0 +1,27 @@
+"""Paper Figs. 5-6: edge-association cost-reducing iteration counts under
+growing device / server numbers (near-linear growth expected)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import make_scenario
+from repro.core.edge_association import AssociationEngine
+
+
+def run(report):
+    t0 = time.time()
+    iters_n = []
+    for n in [15, 30, 45, 60]:
+        sc = make_scenario(n, 5, seed=0)
+        res = AssociationEngine(sc, kind="fast", seed=0).run_batched("random")
+        iters_n.append(res.n_adjustments)
+        report(f"fig5/adjustments/N{n}", None, res.n_adjustments)
+    iters_k = []
+    for k in [5, 15, 25]:
+        sc = make_scenario(60, k, seed=0)
+        res = AssociationEngine(sc, kind="fast", seed=0).run_batched("random")
+        iters_k.append(res.n_adjustments)
+        report(f"fig6/adjustments/K{k}", None, res.n_adjustments)
+    report("paper_convergence/runtime_s", (time.time() - t0) * 1e6, None)
+    return {"fig5": iters_n, "fig6": iters_k}

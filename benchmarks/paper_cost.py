@@ -1,0 +1,56 @@
+"""Paper Figs. 3-4: global cost ratio of HFEL vs the six §V.A benchmark
+schemes, under growing device count (K=5 fixed) and growing server count
+(N=60 fixed). The reported metric matches the paper: each scheme's global
+cost normalized by the uniform-resource-allocation benchmark."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import make_scenario
+from repro.core.edge_association import evaluate_scheme
+
+SCHEMES = ["hfel", "comp_opt", "greedy", "random", "comm_opt", "uniform",
+           "proportional"]
+
+
+def cost_ratio_sweep(points, *, vary: str, fixed: int, seeds=(0, 1)):
+    """Returns {scheme: [ratio per point]} with uniform == 1.0."""
+    out = {s: [] for s in SCHEMES}
+    for p in points:
+        n, k = (p, fixed) if vary == "devices" else (fixed, p)
+        totals = {s: [] for s in SCHEMES}
+        for seed in seeds:
+            sc = make_scenario(n, k, seed=seed)
+            for s in SCHEMES:
+                r = evaluate_scheme(sc, s, seed=seed)
+                totals[s].append(r.total_cost)
+        base = np.mean(totals["uniform"])
+        for s in SCHEMES:
+            out[s].append(float(np.mean(totals[s]) / base))
+    return out
+
+
+def run(report):
+    t0 = time.time()
+    fig3_points = [15, 30, 60]
+    fig3 = cost_ratio_sweep(fig3_points, vary="devices", fixed=5, seeds=(0,))
+    for i, p in enumerate(fig3_points):
+        for s in SCHEMES:
+            report(f"fig3/cost_ratio/{s}/N{p}", None, round(fig3[s][i], 4))
+
+    fig4_points = [5, 15]
+    fig4 = cost_ratio_sweep(fig4_points, vary="servers", fixed=60, seeds=(0,))
+    for i, p in enumerate(fig4_points):
+        for s in SCHEMES:
+            report(f"fig4/cost_ratio/{s}/K{p}", None, round(fig4[s][i], 4))
+
+    # headline claims (paper: HFEL reaches 37-58% of uniform; beats
+    # comp/greedy/random/comm/proportional)
+    hfel_mean = np.mean(fig3["hfel"])
+    report("fig3/hfel_vs_uniform_mean", None, round(float(hfel_mean), 4))
+    report("paper_cost/runtime_s", (time.time() - t0) * 1e6, None)
+    return {"fig3": fig3, "fig4": fig4,
+            "fig3_points": fig3_points, "fig4_points": fig4_points}

@@ -1,0 +1,39 @@
+"""Paper Figs. 13-16: effect of local-iteration count L on convergence
+(fixed edge iterations I=5) and cloud communication rounds to a target
+accuracy under a fixed L*I budget."""
+
+from __future__ import annotations
+
+import time
+
+from repro.data import make_mnist_like
+from repro.fl import train_federated
+
+
+def run(report, *, rounds: int = 15):
+    t0 = time.time()
+    ds = make_mnist_like(30, seed=0)
+    out = {}
+
+    # Figs. 13-14: growing L accelerates convergence per global round
+    for local in [5, 10, 20, 50]:
+        h = train_federated(ds, method="hfel", n_servers=5, rounds=rounds,
+                            local_iters=local, edge_iters=5, lr=0.02,
+                            eval_every=2)
+        out[f"L{local}"] = h.test_acc
+        report(f"fig13/test_acc_final/L{local}", None,
+               round(h.test_acc[-1], 4))
+
+    # Figs. 15-16: fixed L*I = 100; fewer local iters (more edge aggs)
+    # need fewer cloud rounds to the target accuracy
+    target = 0.85
+    for local, edge in [(5, 20), (10, 10), (50, 2)]:
+        h = train_federated(ds, method="hfel", n_servers=5, rounds=rounds,
+                            local_iters=local, edge_iters=edge, lr=0.02,
+                            eval_every=1)
+        reached = next((i for i, a in enumerate(h.test_acc) if a >= target),
+                       rounds)
+        out[f"rounds_to_{target}_L{local}"] = reached
+        report(f"fig15/cloud_rounds_to_{target}/L{local}", None, reached)
+    report("paper_local_iters/runtime_s", (time.time() - t0) * 1e6, None)
+    return out

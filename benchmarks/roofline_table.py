@@ -1,0 +1,47 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline table
+(markdown, written to experiments/roofline_table.md)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HEADER = ("| arch | shape | mesh | mode | compute s | memory s | collective s "
+          "| dominant | MODEL_FLOPS/HLO | roofline frac |")
+SEP = "|" + "---|" * 10
+
+
+def roofline_fraction(r) -> float:
+    """Useful-compute time over the max roofline term: how close the step is
+    to the binding roof. = (MODEL_FLOPS/chips/peak) / max(term)."""
+    terms = [r["compute_s"], r["memory_s"], r["collective_s"]]
+    binding = max(terms)
+    if binding <= 0:
+        return 0.0
+    useful = r["compute_s"] * min(r.get("flops_ratio", 1.0), 1.0)
+    return useful / binding
+
+
+def build_table(dry_dir: str = "experiments/dryrun") -> str:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
+        d = json.load(open(path))
+        r = d["roofline"]
+        frac = roofline_fraction(r)
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | {d['mode']} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | {r['dominant']} "
+            f"| {r['flops_ratio']:.3f} | {frac:.3f} |")
+    return "\n".join([HEADER, SEP] + rows)
+
+
+def run(report):
+    table = build_table()
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline_table.md", "w") as f:
+        f.write(table + "\n")
+    n = table.count("\n") - 1
+    report("roofline/cells_in_table", None, n)
+    return table

@@ -1,0 +1,71 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (us_per_call empty for pure
+accuracy/cost numbers; derived empty for pure timings) and writes a JSON
+dump to experiments/bench_results.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: cost,convergence,training,"
+                         "local_iters,kernels,roofline")
+    ap.add_argument("--rounds", type=int, default=20)
+    args = ap.parse_args()
+
+    results = {}
+    lines = []
+
+    def report(name, us_per_call, derived):
+        us = f"{us_per_call:.1f}" if us_per_call is not None else ""
+        d = derived if derived is not None else ""
+        line = f"{name},{us},{d}"
+        lines.append(line)
+        print(line, flush=True)
+
+    print("name,us_per_call,derived", flush=True)
+
+    sections = {
+        "cost": lambda: __import__("benchmarks.paper_cost",
+                                   fromlist=["run"]).run(report),
+        "convergence": lambda: __import__("benchmarks.paper_convergence",
+                                          fromlist=["run"]).run(report),
+        "training": lambda: __import__(
+            "benchmarks.paper_training",
+            fromlist=["run"]).run(report, rounds=args.rounds),
+        "local_iters": lambda: __import__(
+            "benchmarks.paper_local_iters", fromlist=["run"]).run(report),
+        "kernels": lambda: __import__("benchmarks.kernel_micro",
+                                      fromlist=["run"]).run(report),
+        "roofline": lambda: __import__("benchmarks.roofline_table",
+                                       fromlist=["run"]).run(report),
+    }
+    chosen = (args.only.split(",") if args.only else list(sections))
+    ok = True
+    for name in chosen:
+        try:
+            results[name] = sections[name]()
+        except Exception:
+            ok = False
+            traceback.print_exc()
+            report(f"{name}/FAILED", None, "see stderr")
+
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/bench_results.json", "w") as f:
+        json.dump({k: v for k, v in results.items()
+                   if not callable(v)}, f, indent=1, default=str)
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Append the generated §Roofline table and §Perf comparison to
+EXPERIMENTS.md from the dry-run artifacts. Run once after the sweep and
+hillclimbs complete:
+
+    PYTHONPATH=src python experiments/finalize_experiments.py
+"""
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+from benchmarks.roofline_table import build_table, roofline_fraction  # noqa: E402
+
+DRY = "experiments/dryrun"
+
+
+def load(tag, base=DRY):
+    path = os.path.join(base, tag + ".json")
+    return json.load(open(path)) if os.path.exists(path) else None
+
+
+def fmt_cell(d):
+    r = d["roofline"]
+    amort = r.get("collective_s_amortized", r["collective_s"])
+    return (f"c={r['compute_s']:.3f}s m={r['memory_s']:.3f}s "
+            f"x={amort:.3f}s dom={r['dominant']} "
+            f"frac={roofline_fraction(r):.3f}")
+
+
+def perf_rows():
+    """(cell, variant, terms...) for the §Perf table — corrected-parser
+    re-runs from experiments/perf/."""
+    rows = []
+    specs = [
+        ("qwen2-7b__train_4k__single__sync__baseline",
+         "baseline (fsdp, autodiff-attn)"),
+        ("qwen2-7b__train_4k__single__sync__tp_only", "tp_only"),
+        ("qwen2-7b__train_4k__single__sync__flash_vjp", "flash_vjp"),
+        ("qwen3-0.6b__prefill_32k__single__sync__baseline",
+         "baseline (fsdp, autodiff-attn)"),
+        ("qwen3-0.6b__prefill_32k__single__sync__flash_vjp", "flash_vjp"),
+        ("olmo-1b__train_4k__multi__sync__baseline",
+         "baseline multi-pod (sync, probe-true)"),
+        ("olmo-1b__train_4k__multi__hierarchical__hierarchical",
+         "HFEL hierarchical (I=10, amortized)"),
+    ]
+    for tag, label in specs:
+        d = load(tag, base="experiments/perf")
+        if d is None:
+            continue
+        cell = f"{d['arch']} x {d['shape']} ({d['mesh']})"
+        rows.append(f"| {cell} | {label} | {fmt_cell(d)} |")
+    return rows
+
+
+def main():
+    n_json = len(glob.glob(os.path.join(DRY, "*.json")))
+    n_err = len(glob.glob(os.path.join(DRY, "*.err")))
+    table = build_table()
+    with open("experiments/roofline_table.md", "w") as f:
+        f.write(table + "\n")
+
+    lines = [
+        "",
+        "---",
+        "",
+        "## Appendix A — §Dry-run summary (generated)",
+        "",
+        f"Compiled artifacts: {n_json} cells under `experiments/dryrun/` "
+        f"({n_err} failures).",
+        "",
+        "## Appendix B — §Roofline table (generated, single-pod cells "
+        "probe-extrapolated)",
+        "",
+        table,
+        "",
+        "## Appendix C — §Perf before/after (generated)",
+        "",
+        "| cell | variant | terms |",
+        "|---|---|---|",
+        *perf_rows(),
+        "",
+    ]
+    with open("EXPERIMENTS.md", "a") as f:
+        f.write("\n".join(lines))
+    print(f"appended: {n_json} cells, {len(perf_rows())} perf rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Checkpoint/restart for fault-tolerant training.
+
+Format: one directory per step containing
+  * ``manifest.json``  — step, tree structure (paths + shapes + dtypes),
+    mesh metadata, user extras
+  * ``shard_<i>.npz``  — leaf arrays, chunked so no single file exceeds
+    ``max_shard_bytes`` (multi-host object stores dislike huge blobs)
+
+Writes are atomic (tmp dir + rename) and optionally asynchronous (a
+background thread snapshots device arrays to host first, so the training
+loop never blocks on disk). Restore rebuilds the pytree and can re-shard
+onto a *different* mesh (elastic restart) by passing ``shardings``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def _key_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, *,
+                    extras: dict | None = None,
+                    max_shard_bytes: int = 1 << 30) -> str:
+    """Synchronous atomic save; returns the checkpoint path."""
+    leaves_with_paths, _ = jax.tree.flatten_with_path(tree)
+    names = [_key_str(p) for p, _ in leaves_with_paths]
+    arrays = [np.asarray(v) for _, v in leaves_with_paths]
+
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = final + f".tmp.{os.getpid()}.{int(time.time() * 1e6)}"
+    os.makedirs(tmp, exist_ok=True)
+
+    shards: list[dict[str, np.ndarray]] = [{}]
+    sizes = [0]
+    index = {}
+    for name, arr in zip(names, arrays):
+        if sizes[-1] + arr.nbytes > max_shard_bytes and shards[-1]:
+            shards.append({})
+            sizes.append(0)
+        shard_id = len(shards) - 1
+        shards[shard_id][name] = arr
+        sizes[-1] += arr.nbytes
+        index[name] = {"shard": shard_id, "shape": list(arr.shape),
+                       "dtype": str(arr.dtype)}
+
+    for i, shard in enumerate(shards):
+        np.savez(os.path.join(tmp, f"shard_{i}.npz"),
+                 **{k.replace("/", "\x1f"): v for k, v in shard.items()})
+    manifest = {"step": step, "index": index, "n_shards": len(shards),
+                "extras": extras or {}}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def load_checkpoint(directory: str, *, step: int | None = None,
+                    template: Any | None = None, shardings: Any | None = None):
+    """Load the latest (or given) step. Returns (step, tree, extras).
+
+    ``template``: a pytree whose structure the restored leaves are unflattened
+    into (required — names alone do not determine structure).
+    ``shardings``: optional matching pytree of NamedSharding for elastic
+    restore onto a new mesh via jax.device_put.
+    """
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith("tmp"))
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    step = step if step is not None else steps[-1]
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    data = {}
+    for i in range(manifest["n_shards"]):
+        with np.load(os.path.join(path, f"shard_{i}.npz")) as z:
+            for k in z.files:
+                data[k.replace("\x1f", "/")] = z[k]
+
+    if template is None:
+        return step, data, manifest["extras"]
+
+    leaves_with_paths, treedef = jax.tree.flatten_with_path(template)
+    leaves = [data[_key_str(p)] for p, _ in leaves_with_paths]
+    tree = jax.tree.unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return step, tree, manifest["extras"]
+
+
+class CheckpointManager:
+    """Keep-last-k async checkpointer."""
+
+    def __init__(self, directory: str, *, keep: int = 3,
+                 async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    def save(self, step: int, tree: Any, *, extras: dict | None = None):
+        # snapshot to host first so training can proceed
+        host_tree = jax.tree.map(np.asarray, tree)
+        self.wait()
+
+        def work():
+            save_checkpoint(self.directory, step, host_tree, extras=extras)
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, template=None, *, step=None, shardings=None):
+        self.wait()
+        return load_checkpoint(self.directory, step=step, template=template,
+                               shardings=shardings)
+
+    def latest_step(self) -> int | None:
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.directory)
+                       if d.startswith("step_") and "tmp" not in d)
+        return steps[-1] if steps else None
+
+    def _gc(self):
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.directory)
+                       if d.startswith("step_") and "tmp" not in d)
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
+                          ignore_errors=True)

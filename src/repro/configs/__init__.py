@@ -1,0 +1,36 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` accepts either the registry id (``qwen3-0.6b``) or the
+module name (``qwen3_0p6b``).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "whisper-large-v3": "whisper_large_v3",
+    "olmo-1b": "olmo_1b",
+    "qwen2-7b": "qwen2_7b",
+    "qwen3-0.6b": "qwen3_0p6b",
+    "qwen3-32b": "qwen3_32b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "internvl2-1b": "internvl2_1b",
+    "mamba2-1.3b": "mamba2_1p3b",
+    "zamba2-2.7b": "zamba2_2p7b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    module_name = _MODULES.get(name, name)
+    mod = importlib.import_module(f"repro.configs.{module_name}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {arch: get_config(arch) for arch in ARCH_IDS}

@@ -1,0 +1,251 @@
+"""HFEL cost model — paper eqs. (1)-(17).
+
+All quantities are vectorized over devices (and, where noted, over edge
+servers) so the whole model is jit/vmap friendly. Units:
+
+  * time    — seconds
+  * energy  — joules
+  * rates   — nats/second (the paper's eq. (5) uses ``ln``, i.e. nats)
+  * model / update sizes — nats
+  * CPU frequency — cycles/second (Hz)
+
+Naming vs. the paper (Table I): the paper overloads ``B``/``D``/``E`` for
+both physical quantities and the derived constants of Section III.  Here the
+physical quantities keep descriptive names and the Section-III constants are
+grouped in :class:`RAConstants` with lowercase fields (a, b, d, e, w).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+def _register(cls):
+    """Register a dataclass of arrays as a JAX pytree."""
+    fields = [f.name for f in dataclasses.fields(cls)]
+    jax.tree_util.register_dataclass(cls, data_fields=fields, meta_fields=[])
+    return cls
+
+
+@dataclass(frozen=True)
+class LearningParams:
+    """Learning-task constants (paper §II.A).
+
+    L(theta) = mu * log(1/theta)              — eq. under (1), local iterations
+    I(eps, theta) = delta*log(1/eps)/(1-theta) — eq. (9), edge iterations
+    """
+
+    theta: float = 0.5          # local accuracy
+    epsilon: float = 0.1        # edge accuracy
+    mu: float = 14.4            # local-iteration constant (=> L ≈ 10)
+    delta: float = 2.17         # edge-iteration constant  (=> I ≈ 10)
+    lambda_e: float = 0.5       # energy weight  (eq. 17)
+    lambda_t: float = 0.5       # delay weight   (eq. 17)
+
+    @property
+    def local_iters(self) -> float:
+        return self.mu * math.log(1.0 / self.theta)
+
+    @property
+    def edge_iters(self) -> float:
+        return self.delta * math.log(1.0 / self.epsilon) / (1.0 - self.theta)
+
+
+@_register
+@dataclass
+class DeviceParams:
+    """Per-device physical parameters; every field is an array of shape (N,)."""
+
+    cycles_per_iter: jnp.ndarray   # c_n * |D_n|   (cycles for ONE local iteration)
+    data_samples: jnp.ndarray      # |D_n|         (aggregation weights, eq. 8)
+    model_nats: jnp.ndarray        # d_n           (update size in nats)
+    tx_power: jnp.ndarray          # p_n           (W)
+    channel_gain: jnp.ndarray      # h_n           (dimensionless)
+    alpha: jnp.ndarray             # alpha_n       (capacitance coefficient, F)
+    f_min: jnp.ndarray             # Hz
+    f_max: jnp.ndarray             # Hz
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.cycles_per_iter.shape[0])
+
+
+@_register
+@dataclass
+class ServerParams:
+    """Per-edge-server parameters; every field is an array of shape (K,)."""
+
+    bandwidth: jnp.ndarray         # B_i  (Hz)
+    noise: jnp.ndarray             # N_0  (W)
+    cloud_rate: jnp.ndarray        # r_i  (nats/s, edge -> cloud)
+    cloud_power: jnp.ndarray       # p_i  (W)
+    cloud_nats: jnp.ndarray        # d_i  (edge update size in nats)
+
+    @property
+    def n_servers(self) -> int:
+        return int(self.bandwidth.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# Primitive overheads, eqs. (3)-(7), (12)-(13)
+# ---------------------------------------------------------------------------
+
+def spectral_efficiency(dev: DeviceParams, noise: jnp.ndarray) -> jnp.ndarray:
+    """ln(1 + h_n p_n / N_0) — nats/s per Hz of allocated bandwidth (eq. 5)."""
+    return jnp.log1p(dev.channel_gain * dev.tx_power / noise)
+
+
+def tx_rate(beta: jnp.ndarray, bandwidth: jnp.ndarray, dev: DeviceParams,
+            noise: jnp.ndarray) -> jnp.ndarray:
+    """r_n = beta * B_i * ln(1 + h p / N0)  (eq. 5)."""
+    return beta * bandwidth * spectral_efficiency(dev, noise)
+
+
+def comp_time(dev: DeviceParams, f: jnp.ndarray, lp: LearningParams) -> jnp.ndarray:
+    """t^cmp_n — eq. (3), delay of L(theta) local iterations."""
+    return lp.local_iters * dev.cycles_per_iter / f
+
+
+def comp_energy(dev: DeviceParams, f: jnp.ndarray, lp: LearningParams) -> jnp.ndarray:
+    """e^cmp_n — eq. (4)."""
+    return lp.local_iters * 0.5 * dev.alpha * jnp.square(f) * dev.cycles_per_iter
+
+
+def comm_time(dev: DeviceParams, beta: jnp.ndarray, bandwidth: jnp.ndarray,
+              noise: jnp.ndarray) -> jnp.ndarray:
+    """t^com_{i:n} — eq. (6)."""
+    return dev.model_nats / tx_rate(beta, bandwidth, dev, noise)
+
+
+def comm_energy(dev: DeviceParams, beta: jnp.ndarray, bandwidth: jnp.ndarray,
+                noise: jnp.ndarray) -> jnp.ndarray:
+    """e^com_{i:n} — eq. (7)."""
+    return comm_time(dev, beta, bandwidth, noise) * dev.tx_power
+
+
+# ---------------------------------------------------------------------------
+# Edge-level aggregation overheads, eqs. (10)-(11)
+# ---------------------------------------------------------------------------
+
+def edge_energy(dev: DeviceParams, mask: jnp.ndarray, f: jnp.ndarray,
+                beta: jnp.ndarray, bandwidth: jnp.ndarray, noise: jnp.ndarray,
+                lp: LearningParams) -> jnp.ndarray:
+    """E^edge_{S_i} — eq. (10). ``mask`` selects S_i out of all devices."""
+    per_dev = comm_energy(dev, beta, bandwidth, noise) + comp_energy(dev, f, lp)
+    return lp.edge_iters * jnp.sum(jnp.where(mask, per_dev, 0.0))
+
+
+def edge_delay(dev: DeviceParams, mask: jnp.ndarray, f: jnp.ndarray,
+               beta: jnp.ndarray, bandwidth: jnp.ndarray, noise: jnp.ndarray,
+               lp: LearningParams) -> jnp.ndarray:
+    """T^edge_{S_i} — eq. (11): I * max_n (t^com + t^cmp)."""
+    per_dev = comm_time(dev, beta, bandwidth, noise) + comp_time(dev, f, lp)
+    return lp.edge_iters * jnp.max(jnp.where(mask, per_dev, 0.0))
+
+
+def edge_cost(dev: DeviceParams, mask: jnp.ndarray, f: jnp.ndarray,
+              beta: jnp.ndarray, bandwidth: jnp.ndarray, noise: jnp.ndarray,
+              lp: LearningParams) -> jnp.ndarray:
+    """C_i = lambda_e E^edge + lambda_t T^edge — the objective of (18)."""
+    e = edge_energy(dev, mask, f, beta, bandwidth, noise, lp)
+    t = edge_delay(dev, mask, f, beta, bandwidth, noise, lp)
+    return lp.lambda_e * e + lp.lambda_t * t
+
+
+# ---------------------------------------------------------------------------
+# Cloud aggregation overheads, eqs. (12)-(16), and global objective (17)
+# ---------------------------------------------------------------------------
+
+def cloud_delay(srv: ServerParams) -> jnp.ndarray:
+    """T^cloud_i — eq. (12); shape (K,)."""
+    return srv.cloud_nats / srv.cloud_rate
+
+
+def cloud_energy(srv: ServerParams) -> jnp.ndarray:
+    """E^cloud_i — eq. (13); shape (K,)."""
+    return srv.cloud_power * cloud_delay(srv)
+
+
+def global_cost(dev: DeviceParams, srv: ServerParams, assignment: jnp.ndarray,
+                f: jnp.ndarray, beta: jnp.ndarray, lp: LearningParams):
+    """System cost of one global iteration — eqs. (15)-(17).
+
+    Args:
+      assignment: (N,) int array, device -> server index.
+      f, beta:    (N,) resource decisions per device (beta is the share of
+                  the *assigned* server's bandwidth).
+
+    Returns:
+      (E, T, cost) scalars.
+    """
+    k = srv.n_servers
+    masks = jax.nn.one_hot(assignment, k, dtype=jnp.bool_).T        # (K, N)
+    bw = srv.bandwidth[assignment]
+    n0 = srv.noise[assignment]
+
+    per_dev_e = comm_energy(dev, beta, bw, n0) + comp_energy(dev, f, lp)
+    per_dev_t = comm_time(dev, beta, bw, n0) + comp_time(dev, f, lp)
+
+    e_edge = lp.edge_iters * jnp.sum(
+        jnp.where(masks, per_dev_e[None, :], 0.0), axis=1)          # (K,)
+    t_edge = lp.edge_iters * jnp.max(
+        jnp.where(masks, per_dev_t[None, :], 0.0), axis=1)          # (K,)
+
+    energy = jnp.sum(e_edge + cloud_energy(srv))                    # eq. (15)
+    delay = jnp.max(t_edge + cloud_delay(srv))                      # eq. (16)
+    return energy, delay, lp.lambda_e * energy + lp.lambda_t * delay
+
+
+# ---------------------------------------------------------------------------
+# Section-III constants (A_n, B_n, D_n, E_n, W) for problem (18)
+# ---------------------------------------------------------------------------
+
+@_register
+@dataclass
+class RAConstants:
+    """Constants of problem (18). Fields are (N,) arrays except scalar ``w``.
+
+      a = lambda_e I d_n p_n / (B_i ln(1 + h p/N0))   [paper's A_n]
+      b = lambda_e I L (alpha/2) c_n |D_n|            [paper's B_n]
+      d = d_n / (B_i ln(1 + h p/N0))                  [paper's D_n]
+      e = L c_n |D_n|                                 [paper's E_n]
+      w = lambda_t I                                  [paper's W]
+    """
+
+    a: jnp.ndarray
+    b: jnp.ndarray
+    d: jnp.ndarray
+    e: jnp.ndarray
+    w: jnp.ndarray
+    f_min: jnp.ndarray
+    f_max: jnp.ndarray
+
+
+def ra_constants(dev: DeviceParams, bandwidth, noise, lp: LearningParams) -> RAConstants:
+    """Build the Section-III constants for one edge server's subproblem."""
+    eff = bandwidth * spectral_efficiency(dev, noise)   # B_i ln(1+hp/N0)
+    i_it = lp.edge_iters
+    l_it = lp.local_iters
+    return RAConstants(
+        a=lp.lambda_e * i_it * dev.model_nats * dev.tx_power / eff,
+        b=lp.lambda_e * i_it * l_it * 0.5 * dev.alpha * dev.cycles_per_iter,
+        d=dev.model_nats / eff,
+        e=l_it * dev.cycles_per_iter,
+        w=jnp.asarray(lp.lambda_t * i_it, dtype=jnp.float32),
+        f_min=dev.f_min,
+        f_max=dev.f_max,
+    )
+
+
+def ra_objective(c: RAConstants, mask: jnp.ndarray, f: jnp.ndarray,
+                 beta: jnp.ndarray) -> jnp.ndarray:
+    """Objective of problem (18) given the constants (masked sum/max)."""
+    per_sum = c.a / beta + c.b * jnp.square(f)
+    per_max = c.d / beta + c.e / f
+    return (jnp.sum(jnp.where(mask, per_sum, 0.0))
+            + c.w * jnp.max(jnp.where(mask, per_max, 0.0)))

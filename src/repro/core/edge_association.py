@@ -1,0 +1,450 @@
+"""Edge association across multiple edge servers — paper Section IV.
+
+Implements Algorithm 3 (device *transferring* and *exchanging* adjustments
+iterated to a stable system point, Defs. 4-6 / Thm. 3) plus a beyond-paper
+batched variant that evaluates every candidate transfer of a round in one
+vmapped solve and applies the steepest permitted move.
+
+Permission rules
+----------------
+The paper's Definition 3 ("pareto order") literally requires every changed
+group's utility not to decrease — but moving a device INTO a group always
+adds cost to it (every added device contributes a positive a_n/beta term),
+so under the strict reading no transfer is ever permitted, contradicting the
+paper's own Figs. 3-6.  We therefore implement both readings:
+
+* ``permission="utilitarian"`` (default, matches the paper's observed
+  behaviour and its global objective (17)): an adjustment is permitted iff
+  the system-wide cost strictly decreases.
+* ``permission="pareto"`` (strict Definition 3): additionally no involved
+  server's cost may increase.
+
+Global surrogate objective
+--------------------------
+Following the paper's decomposition v(DS) = sum_i v(S_i), the association
+optimizes  sum_i [ C_i + 1{S_i != {}} * (lambda_e E^cloud_i +
+lambda_t T^cloud_i) ]  — the sum-of-servers surrogate of (17) (the true
+delay term is a max over servers; both are reported).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import resource_allocation as ra
+from repro.core.cost_model import (DeviceParams, LearningParams, RAConstants,
+                                   ServerParams, cloud_delay, cloud_energy,
+                                   global_cost, ra_constants)
+from repro.core.scenario import Scenario
+
+
+# ---------------------------------------------------------------------------
+# Batched per-server group solver with pluggable schemes
+# ---------------------------------------------------------------------------
+
+SCHEME_KINDS = ("optimal", "fast", "paper", "comp_only", "comm_only",
+                "uniform", "proportional")
+
+
+class GroupSolver:
+    """Caches per-server RA constants and solves (server, member-mask) groups.
+
+    ``kind`` selects the resource-allocation scheme of §V.A:
+      optimal      — solve_exact            (full joint optimization)
+      fast         — solve_fixed_point      (screening-grade joint opt.)
+      paper        — solve_paper            (Algorithm 2 faithful)
+      comp_only    — optimal f, uniform beta
+      comm_only    — optimal beta, random fixed f
+      uniform      — uniform beta, random fixed f
+      proportional — beta inversely proportional to distance, random fixed f
+    """
+
+    def __init__(self, sc: Scenario, kind: str = "fast", *, seed: int = 0):
+        assert kind in SCHEME_KINDS, kind
+        self.sc = sc
+        self.kind = kind
+        n, k = sc.n_devices, sc.n_servers
+        # batched constants: leading axis = server
+        self.consts = jax.vmap(
+            lambda bw, n0: ra_constants(sc.dev, bw, n0, sc.lp)
+        )(sc.srv.bandwidth, sc.srv.noise)
+        rng = np.random.default_rng(seed)
+        fmin = np.asarray(sc.dev.f_min)
+        fmax = np.asarray(sc.dev.f_max)
+        self.random_f = jnp.asarray(
+            rng.uniform(fmin, fmax).astype(np.float32))
+        # inverse-distance scores per (server, device) for "proportional"
+        inv = 1.0 / np.maximum(np.asarray(sc.dist), 1.0)
+        self.inv_dist = jnp.asarray(inv.astype(np.float32))
+        self._batch_fn = jax.jit(jax.vmap(self._solve_one))
+
+    def _consts_at(self, i) -> RAConstants:
+        return jax.tree.map(lambda x: x[i], self.consts)
+
+    def _solve_one(self, server_idx, mask):
+        c = self._consts_at(server_idx)
+        n_active = jnp.maximum(jnp.sum(mask), 1)
+        if self.kind in ("optimal", "fast", "paper"):
+            fn = {"optimal": ra.solve_exact, "fast": ra.solve_fixed_point,
+                  "paper": ra.solve_paper}[self.kind]
+            sol = fn(c, mask)
+        elif self.kind == "comp_only":
+            beta = jnp.where(mask, 1.0 / n_active, 0.0)
+            sol = ra.optimize_f_given_beta(c, mask, beta)
+        elif self.kind == "comm_only":
+            sol = ra.optimize_beta_given_f(c, mask, self.random_f)
+        elif self.kind == "uniform":
+            beta = jnp.where(mask, 1.0 / n_active, 0.0)
+            sol = self._fixed_eval(c, mask, beta)
+        else:  # proportional
+            score = jnp.where(mask, self.inv_dist[server_idx], 0.0)
+            beta = score / jnp.maximum(jnp.sum(score), 1e-12)
+            sol = self._fixed_eval(c, mask, beta)
+        return sol
+
+    def _fixed_eval(self, c: RAConstants, mask, beta) -> ra.RASolution:
+        from repro.core.cost_model import ra_objective
+        f = jnp.clip(self.random_f, c.f_min, c.f_max)
+        safe_beta = jnp.where(mask, jnp.maximum(beta, 1e-12), 1.0)
+        cost = jnp.where(jnp.any(mask), ra_objective(c, mask, f, safe_beta), 0.0)
+        deadline = jnp.max(jnp.where(mask, c.d / safe_beta + c.e / f, 0.0))
+        return ra.RASolution(f=f, beta=jnp.where(mask, beta, 0.0),
+                             cost=cost, deadline=deadline)
+
+    def solve_batch(self, server_ids: jnp.ndarray, masks: jnp.ndarray) -> ra.RASolution:
+        """Solve C candidate groups at once: server_ids (C,), masks (C, N).
+
+        Batches are padded to the next power of two so the vmapped solver
+        compiles once per bucket instead of once per batch size.
+        """
+        server_ids = np.asarray(server_ids)
+        masks = np.asarray(masks)
+        c = server_ids.shape[0]
+        bucket = 1 << max(c - 1, 0).bit_length() if c else 1
+        if bucket != c:
+            server_ids = np.concatenate(
+                [server_ids, np.zeros(bucket - c, server_ids.dtype)])
+            masks = np.concatenate(
+                [masks, np.zeros((bucket - c, masks.shape[1]), masks.dtype)])
+        sol = self._batch_fn(jnp.asarray(server_ids), jnp.asarray(masks))
+        return jax.tree.map(lambda x: x[:c], sol)
+
+
+# ---------------------------------------------------------------------------
+# Association state and result
+# ---------------------------------------------------------------------------
+
+@dataclass
+class AssociationResult:
+    assignment: np.ndarray            # (N,) device -> server
+    f: np.ndarray                     # (N,)
+    beta: np.ndarray                  # (N,)
+    server_cost: np.ndarray           # (K,) C_i at the stable point
+    total_cost: float                 # surrogate objective (see module doc)
+    true_energy: float                # eq. (15)
+    true_delay: float                 # eq. (16)
+    true_cost: float                  # eq. (17)
+    n_adjustments: int                # applied permitted adjustments (Figs 5-6)
+    n_rounds: int
+    cost_trace: list = field(default_factory=list)
+
+
+class AssociationEngine:
+    """Runs initialization + adjustment iterations to a stable system point."""
+
+    def __init__(self, sc: Scenario, *, kind: str = "fast",
+                 permission: str = "utilitarian", min_residual_group: int = 2,
+                 seed: int = 0, rel_tol: float = 1e-5):
+        self.sc = sc
+        self.solver = GroupSolver(sc, kind, seed=seed)
+        self.permission = permission
+        self.min_residual = min_residual_group
+        self.rel_tol = rel_tol
+        self.rng = np.random.default_rng(seed)
+        self._cache: dict[tuple[int, frozenset], float] = {}
+        self.avail = np.asarray(sc.avail)                     # (K, N)
+        self.cloud_const = np.asarray(
+            sc.lp.lambda_e * cloud_energy(sc.srv)
+            + sc.lp.lambda_t * cloud_delay(sc.srv), dtype=np.float64)
+
+    # -- group cost with memoization (the paper's history sets h_i) ---------
+
+    def group_cost(self, server: int, members: frozenset) -> float:
+        key = (server, members)
+        if key not in self._cache:
+            mask = np.zeros(self.sc.n_devices, bool)
+            mask[list(members)] = True
+            sol = self.solver.solve_batch(np.array([server]), mask[None, :])
+            base = float(np.asarray(sol.cost)[0])
+            self._cache[key] = base + (self.cloud_const[server] if members else 0.0)
+        return self._cache[key]
+
+    def group_costs_batch(self, pairs: list[tuple[int, frozenset]]) -> np.ndarray:
+        """Memoized batched evaluation of many (server, members) groups."""
+        missing = [p for p in set(pairs) if p not in self._cache]
+        if missing:
+            servers = np.array([s for s, _ in missing])
+            masks = np.zeros((len(missing), self.sc.n_devices), bool)
+            for r, (_, mem) in enumerate(missing):
+                masks[r, list(mem)] = True
+            sols = self.solver.solve_batch(servers, masks)
+            costs = np.asarray(sols.cost, dtype=np.float64)
+            for p, c in zip(missing, costs):
+                self._cache[p] = float(c) + (self.cloud_const[p[0]] if p[1] else 0.0)
+        return np.array([self._cache[p] for p in pairs])
+
+    # -- initial association (§II.C / Algorithm 3 line 2) -------------------
+
+    def initial_assignment(self, init: str = "nearest") -> np.ndarray:
+        n, k = self.sc.n_devices, self.sc.n_servers
+        if init == "nearest":
+            dist = np.where(self.avail, np.asarray(self.sc.dist), np.inf)
+            return np.argmin(dist, axis=0)
+        if init == "random":
+            out = np.empty(n, dtype=np.int64)
+            for d in range(n):
+                choices = np.flatnonzero(self.avail[:, d])
+                out[d] = self.rng.choice(choices)
+            return out
+        raise ValueError(init)
+
+    # -- permission test -----------------------------------------------------
+
+    def _permitted(self, old_costs: list[float], new_costs: list[float]) -> bool:
+        scale = max(sum(old_costs), 1e-9)
+        improves = sum(new_costs) < sum(old_costs) - self.rel_tol * scale
+        if self.permission == "utilitarian":
+            return improves
+        no_harm = all(nc <= oc + self.rel_tol * max(oc, 1e-9)
+                      for oc, nc in zip(old_costs, new_costs))
+        return improves and no_harm
+
+    # -- faithful Algorithm 3 ------------------------------------------------
+
+    def run(self, init: str = "nearest", *, max_rounds: int = 200,
+            exchange_samples: int = 1,
+            assignment: np.ndarray | None = None) -> AssociationResult:
+        assignment = (self.initial_assignment(init) if assignment is None
+                      else np.asarray(assignment).copy())
+        groups = self._groups_of(assignment)
+        n, k = self.sc.n_devices, self.sc.n_servers
+        n_adj = 0
+        trace = [self._total(groups)]
+
+        for rnd in range(max_rounds):
+            changed = False
+            # line 8-10: every device tries every permitted transfer
+            for dev in range(n):
+                src = int(assignment[dev])
+                if len(groups[src]) <= self.min_residual:
+                    continue
+                targets = [j for j in range(k)
+                           if j != src and self.avail[j, dev]]
+                if not targets:
+                    continue
+                src_after = groups[src] - {dev}
+                pairs = [(src, groups[src]), (src, src_after)]
+                for j in targets:
+                    pairs += [(j, groups[j]), (j, groups[j] | {dev})]
+                self.group_costs_batch(pairs)     # warm the cache in one shot
+                best = None
+                for j in targets:
+                    old = [self.group_cost(src, groups[src]),
+                           self.group_cost(j, groups[j])]
+                    new = [self.group_cost(src, src_after),
+                           self.group_cost(j, groups[j] | {dev})]
+                    if self._permitted(old, new):
+                        delta = sum(new) - sum(old)
+                        if best is None or delta < best[0]:
+                            best = (delta, j)
+                if best is not None:
+                    j = best[1]
+                    groups[src] = src_after
+                    groups[j] = groups[j] | {dev}
+                    assignment[dev] = j
+                    n_adj += 1
+                    changed = True
+                    trace.append(self._total(groups))
+            # line 11: random exchange attempts
+            for _ in range(exchange_samples):
+                if self._try_exchange(assignment, groups):
+                    n_adj += 1
+                    changed = True
+                    trace.append(self._total(groups))
+            if not changed:
+                return self._finalize(assignment, groups, n_adj, rnd + 1, trace)
+        return self._finalize(assignment, groups, n_adj, max_rounds, trace)
+
+    def _try_exchange(self, assignment, groups) -> bool:
+        k = self.sc.n_servers
+        occupied = [i for i in range(k) if groups[i]]
+        if len(occupied) < 2:
+            return False
+        i, j = self.rng.choice(occupied, size=2, replace=False)
+        dev_n = int(self.rng.choice(sorted(groups[i])))
+        dev_m = int(self.rng.choice(sorted(groups[j])))
+        if not (self.avail[j, dev_n] and self.avail[i, dev_m]):
+            return False
+        gi = (groups[i] - {dev_n}) | {dev_m}
+        gj = (groups[j] - {dev_m}) | {dev_n}
+        old = [self.group_cost(i, groups[i]), self.group_cost(j, groups[j])]
+        new = [self.group_cost(i, gi), self.group_cost(j, gj)]
+        if self._permitted(old, new):
+            groups[i], groups[j] = gi, gj
+            assignment[dev_n], assignment[dev_m] = j, i
+            return True
+        return False
+
+    # -- beyond-paper: batched steepest-descent rounds ------------------------
+
+    def run_batched(self, init: str = "nearest", *, max_moves: int = 10_000,
+                    exchange_samples: int = 64,
+                    assignment: np.ndarray | None = None) -> AssociationResult:
+        """Evaluate ALL candidate transfers per round in one vmapped solve and
+        apply the single best permitted move (steepest descent). Convergence
+        follows from the same finite-strategy/monotone argument as Thm. 3."""
+        assignment = (self.initial_assignment(init) if assignment is None
+                      else np.asarray(assignment).copy())
+        groups = self._groups_of(assignment)
+        n, k = self.sc.n_devices, self.sc.n_servers
+        n_adj = 0
+        trace = [self._total(groups)]
+        moves = 0
+
+        while moves < max_moves:
+            # candidate transfers: (dev, src, dst)
+            cands = []
+            pairs = []
+            for dev in range(n):
+                src = int(assignment[dev])
+                if len(groups[src]) <= self.min_residual:
+                    continue
+                for dst in range(k):
+                    if dst == src or not self.avail[dst, dev]:
+                        continue
+                    cands.append((dev, src, dst))
+                    pairs += [(src, groups[src]), (src, groups[src] - {dev}),
+                              (dst, groups[dst]), (dst, groups[dst] | {dev})]
+            best = None
+            if cands:
+                costs = self.group_costs_batch(pairs).reshape(-1, 4)
+                for (dev, src, dst), row in zip(cands, costs):
+                    old = [row[0], row[2]]
+                    new = [row[1], row[3]]
+                    if self._permitted(old, new):
+                        delta = sum(new) - sum(old)
+                        if best is None or delta < best[0]:
+                            best = (delta, dev, src, dst)
+            if best is not None:
+                _, dev, src, dst = best
+                groups[src] = groups[src] - {dev}
+                groups[dst] = groups[dst] | {dev}
+                assignment[dev] = dst
+                n_adj += 1
+                moves += 1
+                trace.append(self._total(groups))
+                continue
+            # no transfer: try a batch of sampled exchanges, apply best
+            if not self._batched_exchange(assignment, groups, exchange_samples):
+                break
+            n_adj += 1
+            moves += 1
+            trace.append(self._total(groups))
+        return self._finalize(assignment, groups, n_adj, moves, trace)
+
+    def _batched_exchange(self, assignment, groups, samples: int) -> bool:
+        n, k = self.sc.n_devices, self.sc.n_servers
+        cands = []
+        pairs = []
+        for _ in range(samples):
+            dev_n, dev_m = self.rng.choice(n, size=2, replace=False)
+            i, j = int(assignment[dev_n]), int(assignment[dev_m])
+            if i == j or not (self.avail[j, dev_n] and self.avail[i, dev_m]):
+                continue
+            gi = (groups[i] - {dev_n}) | {dev_m}
+            gj = (groups[j] - {dev_m}) | {dev_n}
+            cands.append((dev_n, dev_m, i, j, gi, gj))
+            pairs += [(i, groups[i]), (i, gi), (j, groups[j]), (j, gj)]
+        if not cands:
+            return False
+        costs = self.group_costs_batch(pairs).reshape(-1, 4)
+        best = None
+        for (dev_n, dev_m, i, j, gi, gj), row in zip(cands, costs):
+            if self._permitted([row[0], row[2]], [row[1], row[3]]):
+                delta = (row[1] + row[3]) - (row[0] + row[2])
+                if best is None or delta < best[0]:
+                    best = (delta, dev_n, dev_m, i, j, gi, gj)
+        if best is None:
+            return False
+        _, dev_n, dev_m, i, j, gi, gj = best
+        groups[i], groups[j] = gi, gj
+        assignment[dev_n], assignment[dev_m] = j, i
+        return True
+
+    # -- bookkeeping -----------------------------------------------------------
+
+    def _groups_of(self, assignment) -> list[frozenset]:
+        return [frozenset(np.flatnonzero(assignment == i))
+                for i in range(self.sc.n_servers)]
+
+    def _total(self, groups) -> float:
+        return float(sum(self.group_cost(i, g) for i, g in enumerate(groups)))
+
+    def _finalize(self, assignment, groups, n_adj, n_rounds, trace) -> AssociationResult:
+        k = self.sc.n_servers
+        servers = np.arange(k)
+        masks = np.zeros((k, self.sc.n_devices), bool)
+        for i, g in enumerate(groups):
+            masks[i, list(g)] = True
+        sols = self.solver.solve_batch(servers, masks)
+        f = np.asarray(jnp.sum(jnp.where(masks, sols.f, 0.0), axis=0))
+        beta = np.asarray(jnp.sum(jnp.where(masks, sols.beta, 0.0), axis=0))
+        server_cost = np.asarray(sols.cost)
+        e, t, c = global_cost(self.sc.dev, self.sc.srv,
+                              jnp.asarray(assignment), jnp.asarray(f),
+                              jnp.asarray(np.maximum(beta, 1e-9)), self.sc.lp)
+        return AssociationResult(
+            assignment=assignment.copy(), f=f, beta=beta,
+            server_cost=server_cost,
+            total_cost=self._total(groups),
+            true_energy=float(e), true_delay=float(t), true_cost=float(c),
+            n_adjustments=n_adj, n_rounds=n_rounds, cost_trace=trace)
+
+
+# ---------------------------------------------------------------------------
+# §V.A benchmark schemes
+# ---------------------------------------------------------------------------
+
+def evaluate_scheme(sc: Scenario, scheme: str, *, seed: int = 0,
+                    batched: bool = True) -> AssociationResult:
+    """Run one of the paper's §V.A comparison schemes end-to-end.
+
+      hfel           — edge association + full joint RA (the paper's algorithm)
+      random         — random association, full RA, no association iterations
+      greedy         — nearest-server association, full RA, no iterations
+      comp_opt       — association + optimal-f / uniform-beta RA
+      comm_opt       — association + optimal-beta / random-f RA
+      uniform        — association + uniform-beta / random-f (no RA opt.)
+      proportional   — association + inverse-distance beta / random-f
+    """
+    kind = {"hfel": "fast", "random": "fast", "greedy": "fast",
+            "comp_opt": "comp_only", "comm_opt": "comm_only",
+            "uniform": "uniform", "proportional": "proportional"}[scheme]
+    eng = AssociationEngine(sc, kind=kind, seed=seed)
+    if scheme in ("random", "greedy"):
+        init = "random" if scheme == "random" else "nearest"
+        assignment = eng.initial_assignment(init)
+        groups = eng._groups_of(assignment)
+        return eng._finalize(assignment, groups, 0, 0,
+                             [eng._total(groups)])
+    init = "random"
+    if batched:
+        return eng.run_batched(init)
+    return eng.run(init)

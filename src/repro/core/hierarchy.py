@@ -1,0 +1,120 @@
+"""Two-tier (edge/cloud) aggregation primitives — paper Algorithm 1.
+
+The same hierarchy is exposed at two scales:
+
+* **Simulation scale** (FL runtime, CPU tests): lists of per-client pytrees
+  aggregated with :func:`repro.utils.tree_weighted_mean` — eq. (8) at the
+  edge, eq. (14) at the cloud.
+
+* **Datacenter scale** (multi-pod mesh): `shard_map`-based collectives where
+  the ``data`` mesh axis plays the edge tier (ICI) and the ``pod`` axis the
+  cloud tier (DCN). :class:`SyncSchedule` decides, per step, whether to run
+  a local step, an edge sync (psum over ``data``) or a cloud sync (psum over
+  ``pod``) — the L(theta) / I(eps, theta) structure of Algorithm 1.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from enum import IntEnum
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree_weighted_mean
+
+
+class SyncLevel(IntEnum):
+    LOCAL = 0   # no cross-shard communication this step
+    EDGE = 1    # aggregate within the pod (ICI, eq. 8)
+    CLOUD = 2   # aggregate across pods (DCN, eq. 14)
+
+
+@dataclass(frozen=True)
+class SyncSchedule:
+    """Algorithm 1's iteration structure.
+
+    ``local_iters``  — L(theta): gradient steps between edge aggregations.
+    ``edge_iters``   — I(eps, theta): edge aggregations between cloud syncs.
+
+    Step indices are 1-based in the paper (t % L == 0 triggers aggregation);
+    here ``level(step)`` takes the 0-based global step and returns what
+    happens *after* that step's local update.
+    """
+
+    local_iters: int
+    edge_iters: int
+
+    def level(self, step: int) -> SyncLevel:
+        s = step + 1
+        if s % (self.local_iters * self.edge_iters) == 0:
+            return SyncLevel.CLOUD
+        if s % self.local_iters == 0:
+            return SyncLevel.EDGE
+        return SyncLevel.LOCAL
+
+    def level_array(self, n_steps: int) -> jnp.ndarray:
+        """Vectorized schedule for lax.scan-driven training loops."""
+        s = jnp.arange(1, n_steps + 1)
+        period = self.local_iters * self.edge_iters
+        return jnp.where(s % period == 0, int(SyncLevel.CLOUD),
+                         jnp.where(s % self.local_iters == 0,
+                                   int(SyncLevel.EDGE), int(SyncLevel.LOCAL)))
+
+    @property
+    def cloud_period(self) -> int:
+        return self.local_iters * self.edge_iters
+
+
+# ---------------------------------------------------------------------------
+# Simulation-scale aggregation (eqs. 8 and 14)
+# ---------------------------------------------------------------------------
+
+def edge_aggregate(client_models: list, client_samples) -> object:
+    """omega_i = sum_n |D_n| omega_n / |D_{S_i}|  — eq. (8)."""
+    return tree_weighted_mean(client_models, client_samples)
+
+
+def cloud_aggregate(edge_models: list, edge_samples) -> object:
+    """omega = sum_i |D_{S_i}| omega_i / |D|  — eq. (14)."""
+    return tree_weighted_mean(edge_models, edge_samples)
+
+
+# ---------------------------------------------------------------------------
+# Datacenter-scale aggregation (inside shard_map)
+# ---------------------------------------------------------------------------
+
+def psum_mean(tree, axis_name: str, weight=None):
+    """Weighted mean over a mesh axis: the shard_map realization of eq. (8)
+    (axis 'data') and eq. (14) (axis 'pod'). Call inside shard_map."""
+    if weight is None:
+        n = jax.lax.psum(1.0, axis_name)
+        return jax.tree.map(lambda x: jax.lax.psum(x, axis_name) / n, tree)
+    total_w = jax.lax.psum(weight, axis_name)
+    return jax.tree.map(
+        lambda x: jax.lax.psum(x * weight, axis_name) / total_w, tree)
+
+
+def hierarchical_sync(tree, level, *, edge_axis: str = "data",
+                      cloud_axis: str = "pod", weight=None):
+    """Apply the sync required by ``level`` (a traced int32 scalar).
+
+    LOCAL: identity. EDGE: mean over ``edge_axis``. CLOUD: mean over
+    ``edge_axis`` then ``cloud_axis`` (a cloud round always includes the
+    final edge aggregation of Algorithm 1).
+
+    Implemented with lax.switch so it can live inside a scanned train loop
+    (the collective ops appear in all branches of the HLO; the branch select
+    is data-dependent).
+    """
+    def local_fn(t):
+        return t
+
+    def edge_fn(t):
+        return psum_mean(t, edge_axis, weight)
+
+    def cloud_fn(t):
+        t = psum_mean(t, edge_axis, weight)
+        return psum_mean(t, cloud_axis)
+
+    return jax.lax.switch(level, [local_fn, edge_fn, cloud_fn], tree)

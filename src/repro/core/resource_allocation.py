@@ -1,0 +1,491 @@
+"""Optimal computation/communication resource allocation — paper Section III.
+
+Solves problem (18) for one edge server's training group S_i:
+
+    min  C_i(f, beta) = sum_n [ a_n/beta_n + b_n f_n^2 ]
+                        + w * max_n [ d_n/beta_n + e_n/f_n ]
+    s.t. sum_n beta_n <= 1,  0 < beta_n <= 1,  f_min <= f_n <= f_max
+
+with the Section-III constants (a, b, d, e, w) from
+:func:`repro.core.cost_model.ra_constants`.
+
+Four solvers are provided; all are jit-able and vmap-able over padded groups
+(``mask`` selects the active members):
+
+* :func:`solve_paper`        — Algorithm 2 *faithful*: substitute the KKT
+  bandwidth rule beta(f) of Theorem 2 / eq. (19), then solve the reduced
+  f-only convex problem (32) by a projected first-order method with an
+  annealed log-sum-exp smoothing of the max (standing in for the paper's
+  "CVX / IPOPT").
+* :func:`solve_fixed_point`  — fast beyond-paper solver exploiting the full
+  KKT structure: at the optimum every device with interior f finishes at a
+  common deadline t (eq. 25 with tau_n = 2 b_n f_n^3 / e_n > 0) and
+  sum_n tau_n = W (eq. 23); bisection on t with an inner beta<->f fixed
+  point. Near-exact in the common interior regime; used to screen the many
+  candidate groups of edge association.
+* :func:`solve_exact`        — exact nested parametric solver: golden-section
+  over the deadline t, bisection over the bandwidth multiplier nu, per-device
+  golden-section for the (convex) boundary trade-off. Handles all box/cap
+  clipping cases; the reported final costs use this.
+* :func:`solve_reference`    — plain projected subgradient on (f, beta)
+  jointly. Slow, structure-free; the test oracle.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import dataclasses
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.cost_model import RAConstants, ra_objective
+
+_GOLDEN = 0.6180339887498949
+_EPS = 1e-12
+
+
+def _register(cls):
+    fields = [f.name for f in dataclasses.fields(cls)]
+    jax.tree_util.register_dataclass(cls, data_fields=fields, meta_fields=[])
+    return cls
+
+
+@_register
+@dataclass
+class RASolution:
+    f: jnp.ndarray          # (N,) optimal CPU frequencies (padded: f_min)
+    beta: jnp.ndarray       # (N,) optimal bandwidth shares (padded: 0)
+    cost: jnp.ndarray       # scalar, optimal value of (18); 0 for empty group
+    deadline: jnp.ndarray   # scalar t* = max_n d/beta + e/f
+
+
+def _masked_beta_norm(s: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Normalize positive scores s to sum to 1 over the active set."""
+    s = jnp.where(mask, s, 0.0)
+    tot = jnp.maximum(jnp.sum(s), _EPS)
+    return jnp.where(mask, s / tot, 0.0)
+
+
+def _finalize(c: RAConstants, mask, f, beta) -> RASolution:
+    any_active = jnp.any(mask)
+    f = jnp.where(mask, jnp.clip(f, c.f_min, c.f_max), c.f_min)
+    beta = _masked_beta_norm(jnp.maximum(beta, _EPS), mask)
+    safe_beta = jnp.where(mask, jnp.maximum(beta, _EPS), 1.0)
+    cost = jnp.where(any_active, ra_objective(c, mask, f, safe_beta), 0.0)
+    deadline = jnp.max(jnp.where(mask, c.d / safe_beta + c.e / f, 0.0))
+    return RASolution(f=f, beta=beta, cost=cost, deadline=deadline)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 2: the closed-form bandwidth rule, eq. (19)
+# ---------------------------------------------------------------------------
+
+def beta_of_f(c: RAConstants, mask: jnp.ndarray, f: jnp.ndarray) -> jnp.ndarray:
+    """beta*_n  proportional to  (a_n + (2 b_n f_n^3 / e_n) d_n)^(1/3)."""
+    tau = 2.0 * c.b * f**3 / jnp.maximum(c.e, _EPS)
+    score = jnp.cbrt(jnp.maximum(c.a + tau * c.d, _EPS))
+    return _masked_beta_norm(score, mask)
+
+
+# ---------------------------------------------------------------------------
+# Solver 1 — Algorithm 2 (paper-faithful)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("n_steps",))
+def solve_paper(c: RAConstants, mask: jnp.ndarray, *, n_steps: int = 400) -> RASolution:
+    """Algorithm 2: replace beta by eq. (19), solve (32) over f only.
+
+    The max term of (32) is smoothed with an annealed log-sum-exp
+    (temperature decays geometrically), and the box constraint on f is kept
+    by projection. Adam is used as the first-order engine — the role the
+    paper assigns to an off-the-shelf convex solver.
+    """
+    n = c.a.shape[0]
+
+    def objective(f, temp):
+        beta = beta_of_f(c, mask, f)
+        safe_beta = jnp.where(mask, jnp.maximum(beta, _EPS), 1.0)
+        s = jnp.sum(jnp.where(mask, c.a / safe_beta + c.b * f**2, 0.0))
+        per_max = jnp.where(mask, c.d / safe_beta + c.e / f, -jnp.inf)
+        # temperature-scaled LSE -> max as temp -> 0
+        m = temp * jax.nn.logsumexp(per_max / temp)
+        return s + c.w * m
+
+    grad_fn = jax.grad(objective)
+    f0 = jnp.sqrt(c.f_min * c.f_max)
+    scale = c.f_max - c.f_min
+    t_hot = jnp.asarray(1e2, jnp.float32)
+    decay = (1e-4 / 1e2) ** (1.0 / max(n_steps - 1, 1))
+
+    def step(carry, _):
+        f, m1, m2, k, temp = carry
+        g = grad_fn(f, temp) * scale          # precondition by box width
+        m1 = 0.9 * m1 + 0.1 * g
+        m2 = 0.999 * m2 + 0.001 * g * g
+        m1h = m1 / (1 - 0.9 ** (k + 1))
+        m2h = m2 / (1 - 0.999 ** (k + 1))
+        f = f - 0.02 * scale * m1h / (jnp.sqrt(m2h) + 1e-8)
+        f = jnp.clip(f, c.f_min, c.f_max)
+        return (f, m1, m2, k + 1, temp * decay), None
+
+    init = (f0, jnp.zeros(n), jnp.zeros(n), jnp.asarray(0), t_hot)
+    (f, _, _, _, _), _ = lax.scan(step, init, None, length=n_steps)
+    return _finalize(c, mask, f, beta_of_f(c, mask, f))
+
+
+# ---------------------------------------------------------------------------
+# Solver 2 — KKT fixed point (fast screening solver)
+# ---------------------------------------------------------------------------
+
+def _deadline_bracket(c: RAConstants, mask):
+    """Feasible deadline range.
+
+    Lower: smallest t with sum_n d_n/(t - e_n/f_max) <= 1 (every device at
+    max frequency, bandwidth exactly exhausted). Upper: same with f_min.
+    Both found by bisection on the monotone sum.
+    """
+    def sum_beta_min(t, f):
+        slack = t - c.e / f
+        b = jnp.where(mask, c.d / jnp.maximum(slack, _EPS), 0.0)
+        b = jnp.where(mask & (slack <= 0), 1e6, b)
+        return jnp.sum(b)
+
+    def solve_t(f):
+        lo = jnp.max(jnp.where(mask, c.e / f + c.d, 0.0))      # per-device floor
+        hi = lo + jnp.sum(jnp.where(mask, c.d, 0.0)) * 1e4 + 1.0
+
+        def body(_, lohi):
+            lo_, hi_ = lohi
+            mid = 0.5 * (lo_ + hi_)
+            ok = sum_beta_min(mid, f) <= 1.0
+            return (jnp.where(ok, lo_, mid), jnp.where(ok, mid, hi_))
+
+        lo_, hi_ = lax.fori_loop(0, 60, body, (lo, hi))
+        return hi_
+
+    return solve_t(c.f_max), solve_t(c.f_min)
+
+
+@partial(jax.jit, static_argnames=("n_golden", "n_inner"))
+def solve_fixed_point(c: RAConstants, mask: jnp.ndarray, *, n_golden: int = 48,
+                      n_inner: int = 12) -> RASolution:
+    """Golden-section on the common deadline t along the KKT path.
+
+    At a fixed t, beta follows eq. (19) and f the tightness relation
+    f_n = clip(e_n / (t - d_n/beta_n), box) — iterated as a fixed point.
+    Rather than root-finding the eq.-(23) residual sum tau_n = W (which has
+    no root once box constraints clip f, and then misplaces t badly), the
+    *exact objective* (18) is evaluated along this one-parameter family and
+    minimized by golden-section: exact whenever the interior KKT structure
+    holds, and never pathological when it does not.
+    """
+    t_lo, t_hi = _deadline_bracket(c, mask)
+    t_lo = t_lo * (1.0 + 1e-6)
+    t_hi = jnp.maximum(t_hi * 1.5, t_lo * 4.0) + 1.0
+
+    def fb_of_t(t):
+        def body(_, f):
+            beta = beta_of_f(c, mask, f)
+            safe_beta = jnp.where(mask, jnp.maximum(beta, _EPS), 1.0)
+            slack = t - c.d / safe_beta
+            f_new = jnp.where(slack > 0, c.e / jnp.maximum(slack, _EPS), c.f_max)
+            return jnp.clip(f_new, c.f_min, c.f_max)
+
+        f = lax.fori_loop(0, n_inner, body, jnp.sqrt(c.f_min * c.f_max))
+        return f, beta_of_f(c, mask, f)
+
+    def cost_of_t(t):
+        f, beta = fb_of_t(t)
+        safe_beta = jnp.where(mask, jnp.maximum(beta, _EPS), 1.0)
+        return ra_objective(c, mask, f, safe_beta)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        m1 = hi - _GOLDEN * (hi - lo)
+        m2 = lo + _GOLDEN * (hi - lo)
+        go_right = cost_of_t(m1) > cost_of_t(m2)
+        return (jnp.where(go_right, m1, lo), jnp.where(go_right, hi, m2))
+
+    lo, hi = lax.fori_loop(0, n_golden, body, (t_lo, t_hi))
+    f, beta = fb_of_t(0.5 * (lo + hi))
+    return _finalize(c, mask, f, beta)
+
+
+# ---------------------------------------------------------------------------
+# Solver 3 — exact nested parametric solver (beyond-paper)
+# ---------------------------------------------------------------------------
+
+def _inner_beta_f(c: RAConstants, mask, t, nu, n_beta: int = 32):
+    """For fixed (deadline t, bandwidth price nu): per-device minimize
+
+        psi(beta) = a/beta + b * f(beta)^2 + nu*beta,
+        f(beta)   = clip(e / (t - d/beta), f_min, f_max)
+
+    over beta in [beta_feas(t), 1]. psi is convex (see DESIGN.md §2);
+    vectorized golden-section across devices.
+    """
+    # feasible lower end: meet deadline at f_max
+    slack_max = t - c.e / c.f_max
+    b_lo = jnp.where(slack_max > 0, c.d / jnp.maximum(slack_max, _EPS), 1.0)
+    b_lo = jnp.clip(b_lo, _EPS, 1.0)
+    b_hi = jnp.ones_like(b_lo)
+
+    def f_of_beta(beta):
+        slack = t - c.d / jnp.maximum(beta, _EPS)
+        f = jnp.where(slack > 0, c.e / jnp.maximum(slack, _EPS), c.f_max)
+        return jnp.clip(f, c.f_min, c.f_max)
+
+    def psi(beta):
+        f = f_of_beta(beta)
+        return c.a / jnp.maximum(beta, _EPS) + c.b * f**2 + nu * beta
+
+    def body(_, lohi):
+        lo, hi = lohi
+        m1 = hi - _GOLDEN * (hi - lo)
+        m2 = lo + _GOLDEN * (hi - lo)
+        go_right = psi(m1) > psi(m2)
+        return (jnp.where(go_right, m1, lo), jnp.where(go_right, hi, m2))
+
+    lo, hi = lax.fori_loop(0, n_beta, body, (b_lo, b_hi))
+    beta = 0.5 * (lo + hi)
+    return beta, f_of_beta(beta)
+
+
+def _solve_fixed_t(c: RAConstants, mask, t, n_nu: int = 40):
+    """Exact inner solve at fixed deadline t: bisect the bandwidth price nu
+    so that the active betas sum to 1 (sum beta decreasing in nu)."""
+    def sum_beta(nu):
+        beta, _ = _inner_beta_f(c, mask, t, nu)
+        return jnp.sum(jnp.where(mask, beta, 0.0))
+
+    # bracket: nu=0 gives each beta -> its unconstrained max (sum >= 1 when
+    # the simplex binds); grow hi until sum <= 1.
+    def grow(_, hi):
+        return jnp.where(sum_beta(hi) > 1.0, hi * 8.0, hi)
+
+    hi = lax.fori_loop(0, 12, grow, jnp.asarray(1.0, jnp.float32))
+    simplex_binds = sum_beta(jnp.asarray(0.0, jnp.float32)) > 1.0
+
+    def body(_, lohi):
+        lo_, hi_ = lohi
+        mid = 0.5 * (lo_ + hi_)
+        over = sum_beta(mid) > 1.0
+        return (jnp.where(over, mid, lo_), jnp.where(over, hi_, mid))
+
+    lo_, hi_ = lax.fori_loop(0, n_nu, body, (jnp.asarray(0.0, jnp.float32), hi))
+    nu = jnp.where(simplex_binds, 0.5 * (lo_ + hi_), 0.0)
+    beta, f = _inner_beta_f(c, mask, t, nu)
+    value = jnp.sum(jnp.where(mask, c.a / jnp.maximum(beta, _EPS) + c.b * f**2, 0.0))
+    return beta, f, value
+
+
+@partial(jax.jit, static_argnames=("n_outer",))
+def solve_exact(c: RAConstants, mask: jnp.ndarray, *, n_outer: int = 44) -> RASolution:
+    """Golden-section over t of J(t) = inner_value(t) + w*t (convex)."""
+    t_lo, t_hi = _deadline_bracket(c, mask)
+    t_lo = t_lo * (1.0 + 1e-6)
+    t_hi = jnp.maximum(t_hi * 2.0, t_lo * 4.0)
+
+    def j_of_t(t):
+        _, _, value = _solve_fixed_t(c, mask, t)
+        return value + c.w * t
+
+    def body(_, lohi):
+        lo, hi = lohi
+        m1 = hi - _GOLDEN * (hi - lo)
+        m2 = lo + _GOLDEN * (hi - lo)
+        go_right = j_of_t(m1) > j_of_t(m2)
+        return (jnp.where(go_right, m1, lo), jnp.where(go_right, hi, m2))
+
+    lo, hi = lax.fori_loop(0, n_outer, body, (t_lo, t_hi))
+    t_star = 0.5 * (lo + hi)
+    beta, f, _ = _solve_fixed_t(c, mask, t_star)
+    return _finalize(c, mask, f, beta)
+
+
+# ---------------------------------------------------------------------------
+# Solver 4 — projected subgradient reference (test oracle)
+# ---------------------------------------------------------------------------
+
+def _project_simplex_cap(beta: jnp.ndarray, mask: jnp.ndarray,
+                         lo: float = 1e-6) -> jnp.ndarray:
+    """Euclidean projection onto {lo <= beta_n <= 1, sum_active beta <= 1}."""
+    n_active = jnp.maximum(jnp.sum(mask), 1)
+    beta = jnp.clip(jnp.where(mask, beta, 0.0), lo, 1.0)
+    need = jnp.sum(beta) > 1.0
+
+    # bisection on the shift s: sum clip(beta - s, lo, 1) = 1
+    def body(_, lohi):
+        l, h = lohi
+        mid = 0.5 * (l + h)
+        tot = jnp.sum(jnp.where(mask, jnp.clip(beta - mid, lo, 1.0), 0.0))
+        return (jnp.where(tot > 1.0, mid, l), jnp.where(tot > 1.0, h, mid))
+
+    l, h = lax.fori_loop(0, 50, body, (jnp.asarray(0.0), jnp.max(beta)))
+    shifted = jnp.clip(beta - 0.5 * (l + h), lo, 1.0)
+    out = jnp.where(need, shifted, beta)
+    return jnp.where(mask, out, 0.0)
+
+
+@partial(jax.jit, static_argnames=("n_steps",))
+def solve_reference(c: RAConstants, mask: jnp.ndarray, *, n_steps: int = 4000,
+                    seed: int = 0) -> RASolution:
+    """Projected subgradient on (f, beta) jointly; keeps the best iterate."""
+    def objective(fb):
+        f, beta = fb
+        safe_beta = jnp.where(mask, jnp.maximum(beta, _EPS), 1.0)
+        return ra_objective(c, mask, f, safe_beta)
+
+    grad_fn = jax.grad(objective)
+    f0 = jnp.sqrt(c.f_min * c.f_max)
+    b0 = _project_simplex_cap(jnp.where(mask, 1.0, 0.0) /
+                              jnp.maximum(jnp.sum(mask), 1), mask)
+
+    def step(carry, k):
+        f, beta, best_f, best_b, best_v = carry
+        gf, gb = grad_fn((f, beta))
+        lr = 1.0 / jnp.sqrt(k + 1.0)
+        f = jnp.clip(f - lr * (c.f_max - c.f_min) * 0.1 *
+                     gf / (jnp.abs(gf) + 1e-20), c.f_min, c.f_max)
+        beta = _project_simplex_cap(
+            beta - lr * 0.05 * gb / (jnp.linalg.norm(gb) + 1e-20), mask)
+        v = objective((f, beta))
+        better = v < best_v
+        best = (jnp.where(better, f, best_f), jnp.where(better, beta, best_b),
+                jnp.where(better, v, best_v))
+        return (f, beta, *best), None
+
+    init = (f0, b0, f0, b0, objective((f0, b0)))
+    (_, _, best_f, best_b, _), _ = lax.scan(step, init, jnp.arange(n_steps))
+    return _finalize(c, mask, best_f, best_b)
+
+
+# ---------------------------------------------------------------------------
+# Partial-optimization variants for the paper's §V.A benchmark schemes
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def optimize_f_given_beta(c: RAConstants, mask: jnp.ndarray,
+                          beta: jnp.ndarray) -> RASolution:
+    """"Computation optimization" scheme: optimal f under a fixed beta.
+
+    Exact via golden-section on the deadline: at fixed t the objective is
+    increasing in f so f_n(t) = clip(e_n/(t - d_n/beta_n), box); the value
+    U(t) = sum b f(t)^2 + w t is convex in t.
+    """
+    safe_beta = jnp.where(mask, jnp.maximum(beta, _EPS), 1.0)
+    floor = c.d / safe_beta
+    t_lo = jnp.max(jnp.where(mask, floor + c.e / c.f_max, 0.0)) * (1 + 1e-6)
+    t_hi = jnp.max(jnp.where(mask, floor + c.e / c.f_min, 0.0)) * 1.5 + 1.0
+
+    def f_of_t(t):
+        slack = t - floor
+        f = jnp.where(slack > 0, c.e / jnp.maximum(slack, _EPS), c.f_max)
+        return jnp.clip(f, c.f_min, c.f_max)
+
+    def u_of_t(t):
+        f = f_of_t(t)
+        return jnp.sum(jnp.where(mask, c.b * f**2, 0.0)) + c.w * t
+
+    def body(_, lohi):
+        lo, hi = lohi
+        m1 = hi - _GOLDEN * (hi - lo)
+        m2 = lo + _GOLDEN * (hi - lo)
+        go_right = u_of_t(m1) > u_of_t(m2)
+        return (jnp.where(go_right, m1, lo), jnp.where(go_right, hi, m2))
+
+    lo, hi = lax.fori_loop(0, 48, body, (t_lo, t_hi))
+    f = f_of_t(0.5 * (lo + hi))
+    any_active = jnp.any(mask)
+    cost = jnp.where(any_active, ra_objective(c, mask, f, safe_beta), 0.0)
+    deadline = jnp.max(jnp.where(mask, c.d / safe_beta + c.e / f, 0.0))
+    return RASolution(f=jnp.where(mask, f, c.f_min),
+                      beta=jnp.where(mask, beta, 0.0), cost=cost,
+                      deadline=deadline)
+
+
+@jax.jit
+def optimize_beta_given_f(c: RAConstants, mask: jnp.ndarray,
+                          f: jnp.ndarray) -> RASolution:
+    """"Communication optimization" scheme: optimal beta under a fixed f.
+
+    Exact: golden-section over t with an inner water-filling
+    beta_n(t, nu) = max(d_n/(t - e_n/f_n), sqrt(a_n/nu)) and bisection on nu
+    for sum beta = 1.
+    """
+    e_over_f = c.e / jnp.clip(f, c.f_min, c.f_max)
+
+    def betas(t, nu):
+        b_floor = jnp.where(t > e_over_f,
+                            c.d / jnp.maximum(t - e_over_f, _EPS), 1.0)
+        b_free = jnp.sqrt(c.a / jnp.maximum(nu, _EPS))
+        return jnp.clip(jnp.maximum(b_floor, b_free), _EPS, 1.0)
+
+    def solve_nu(t):
+        def sum_b(nu):
+            return jnp.sum(jnp.where(mask, betas(t, nu), 0.0))
+
+        hi0 = jnp.asarray(1.0, jnp.float32)
+        hi = lax.fori_loop(0, 14, lambda _, h: jnp.where(sum_b(h) > 1, h * 8, h), hi0)
+
+        def body(_, lohi):
+            l, h = lohi
+            mid = 0.5 * (l + h)
+            return (jnp.where(sum_b(mid) > 1, mid, l),
+                    jnp.where(sum_b(mid) > 1, h, mid))
+
+        l, h = lax.fori_loop(0, 44, body, (jnp.asarray(0.0, jnp.float32), hi))
+        return 0.5 * (l + h)
+
+    # feasible t: sum of beta floors <= 1
+    def sum_floor(t):
+        b = jnp.where(t > e_over_f, c.d / jnp.maximum(t - e_over_f, _EPS), 1e6)
+        return jnp.sum(jnp.where(mask, b, 0.0))
+
+    lo0 = jnp.max(jnp.where(mask, e_over_f + c.d, 0.0))
+    hi0 = lo0 + jnp.sum(jnp.where(mask, c.d, 0.0)) * 1e4 + 1.0
+
+    def fbody(_, lohi):
+        l, h = lohi
+        mid = 0.5 * (l + h)
+        ok = sum_floor(mid) <= 1.0
+        return (jnp.where(ok, l, mid), jnp.where(ok, mid, h))
+
+    _, t_lo = lax.fori_loop(0, 60, fbody, (lo0, hi0))
+    t_hi = t_lo * 4.0 + 1.0
+
+    def v_of_t(t):
+        beta = betas(t, solve_nu(t))
+        return jnp.sum(jnp.where(mask, c.a / beta, 0.0)) + c.w * t
+
+    def gbody(_, lohi):
+        lo, hi = lohi
+        m1 = hi - _GOLDEN * (hi - lo)
+        m2 = lo + _GOLDEN * (hi - lo)
+        go_right = v_of_t(m1) > v_of_t(m2)
+        return (jnp.where(go_right, m1, lo), jnp.where(go_right, hi, m2))
+
+    lo, hi = lax.fori_loop(0, 44, gbody, (t_lo * (1 + 1e-6), t_hi))
+    t_star = 0.5 * (lo + hi)
+    beta = _masked_beta_norm(betas(t_star, solve_nu(t_star)), mask)
+    return _finalize(c, mask, jnp.clip(f, c.f_min, c.f_max), beta)
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher
+# ---------------------------------------------------------------------------
+
+SOLVERS = {
+    "paper": solve_paper,
+    "fixed_point": solve_fixed_point,
+    "exact": solve_exact,
+    "reference": solve_reference,
+}
+
+
+def solve(c: RAConstants, mask: jnp.ndarray, method: str = "exact") -> RASolution:
+    """Solve problem (18). ``method`` in {paper, fixed_point, exact, reference}."""
+    return SOLVERS[method](c, mask)

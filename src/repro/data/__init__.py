@@ -1,0 +1,6 @@
+from repro.data.federated import (FederatedDataset, make_femnist_like,
+                                  make_mnist_like, partition_power_law)
+from repro.data.tokens import TokenPipeline
+
+__all__ = ["FederatedDataset", "make_femnist_like", "make_mnist_like",
+           "partition_power_law", "TokenPipeline"]

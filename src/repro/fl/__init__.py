@@ -1,0 +1,5 @@
+from repro.fl.fl_model import MODELS, accuracy, masked_loss, mlr_init, mlp_init
+from repro.fl.training import FederatedTrainer, TrainHistory, train_federated
+
+__all__ = ["MODELS", "accuracy", "masked_loss", "mlr_init", "mlp_init",
+           "FederatedTrainer", "TrainHistory", "train_federated"]

@@ -1,0 +1,54 @@
+"""The paper's federated learning tasks: multinomial logistic regression and
+a small MLP (image-classification stand-ins for MNIST/FEMNIST), with masked
+full-batch loss/gradients as the paper trains (full batch size)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlr_init(rng, dim: int, n_classes: int):
+    k = jax.random.split(rng, 1)[0]
+    return {"w": jax.random.normal(k, (dim, n_classes)) * 0.01,
+            "b": jnp.zeros((n_classes,))}
+
+
+def mlr_logits(params, x):
+    return x @ params["w"] + params["b"]
+
+
+def mlp_init(rng, dim: int, n_classes: int, hidden: int = 128):
+    k1, k2 = jax.random.split(rng)
+    return {"w1": jax.random.normal(k1, (dim, hidden)) * (dim ** -0.5),
+            "b1": jnp.zeros((hidden,)),
+            "w2": jax.random.normal(k2, (hidden, n_classes)) * (hidden ** -0.5),
+            "b2": jnp.zeros((n_classes,))}
+
+
+def mlp_logits(params, x):
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def masked_loss(logits_fn, params, x, y):
+    """Full-batch CE; y == -1 marks padding (clients have ragged data)."""
+    logits = logits_fn(params, x)
+    mask = (y >= 0).astype(jnp.float32)
+    y_safe = jnp.maximum(y, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y_safe[:, None], axis=-1)[:, 0]
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def accuracy(logits_fn, params, x, y):
+    pred = jnp.argmax(logits_fn(params, x), axis=-1)
+    mask = (y >= 0).astype(jnp.float32)
+    hits = (pred == y).astype(jnp.float32) * mask
+    return jnp.sum(hits) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+MODELS = {
+    "mlr": (mlr_init, mlr_logits),
+    "mlp": (mlp_init, mlp_logits),
+}

@@ -1,0 +1,170 @@
+"""Federated training loops — paper Algorithm 1 (HFEL) and FedAvg (§V.B).
+
+Everything is vectorized over clients: client parameters live as one pytree
+with a leading (n_clients,) axis; local full-batch GD runs as a
+``vmap``-of-``scan``; edge aggregation (eq. 8) is a segment-weighted mean
+over the device->server assignment; cloud aggregation (eq. 14) a weighted
+mean over everything. One jit per round.
+
+The §V.B protocol is preserved: per global round both methods perform the
+same TOTAL number of local iterations (L*I); HFEL interleaves I edge
+aggregations, FedAvg aggregates only at the cloud.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.federated import FederatedDataset
+from repro.fl.fl_model import MODELS, accuracy, masked_loss
+
+
+@dataclass
+class TrainHistory:
+    test_acc: list = field(default_factory=list)
+    train_acc: list = field(default_factory=list)
+    train_loss: list = field(default_factory=list)
+
+    def as_dict(self):
+        return {"test_acc": self.test_acc, "train_acc": self.train_acc,
+                "train_loss": self.train_loss}
+
+
+class FederatedTrainer:
+    """Runs HFEL or FedAvg on a FederatedDataset.
+
+    ``assignment``: (n_clients,) device -> edge-server map (HFEL only) —
+    typically the output of the core edge-association algorithm.
+    ``client_mask``: boolean participation mask, re-settable between rounds
+    (straggler dropping / failure injection hook).
+    """
+
+    def __init__(self, ds: FederatedDataset, *, model: str = "mlr",
+                 lr: float = 0.01, seed: int = 0):
+        self.ds = ds
+        init_fn, self.logits_fn = MODELS[model]
+        rng = jax.random.key(seed)
+        proto = init_fn(rng, ds.dim, ds.n_classes)
+        # identical init across clients (the paper broadcasts omega^0)
+        self.client_params = jax.tree.map(
+            lambda p: jnp.broadcast_to(p, (ds.n_clients,) + p.shape), proto)
+        self.lr = lr
+        self.sizes = jnp.asarray(ds.client_sizes)
+        self.x = jnp.asarray(ds.client_x)
+        self.y = jnp.asarray(ds.client_y)
+        self.client_mask = jnp.ones((ds.n_clients,), bool)
+
+        loss = partial(masked_loss, self.logits_fn)
+
+        def local_steps(params, x, y, n_steps):
+            def step(p, _):
+                g = jax.grad(loss)(p, x, y)
+                return jax.tree.map(lambda a, b: a - lr * b, p, g), None
+
+            out, _ = jax.lax.scan(step, params, None, length=n_steps)
+            return out
+
+        self._local = jax.jit(jax.vmap(local_steps, in_axes=(0, 0, 0, None)),
+                              static_argnums=3)
+
+    # -- aggregation ---------------------------------------------------------
+
+    def _weights(self):
+        return self.sizes * self.client_mask.astype(self.sizes.dtype)
+
+    def edge_aggregate(self, assignment: jnp.ndarray, n_servers: int):
+        """eq. (8): weighted mean within each server group, broadcast back."""
+        w = self._weights()
+
+        def agg(leaf):
+            num = jax.ops.segment_sum(
+                leaf * w.reshape((-1,) + (1,) * (leaf.ndim - 1)),
+                assignment, n_servers)
+            den = jax.ops.segment_sum(w, assignment, n_servers)
+            server = num / jnp.maximum(
+                den.reshape((-1,) + (1,) * (leaf.ndim - 1)), 1e-9)
+            return server[assignment]
+
+        self.client_params = jax.tree.map(agg, self.client_params)
+
+    def cloud_aggregate(self):
+        """eq. (14): global weighted mean, broadcast back."""
+        w = self._weights()
+
+        def agg(leaf):
+            wr = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
+            mean = jnp.sum(leaf * wr, axis=0) / jnp.maximum(jnp.sum(w), 1e-9)
+            return jnp.broadcast_to(mean, leaf.shape)
+
+        self.client_params = jax.tree.map(agg, self.client_params)
+
+    def global_params(self):
+        return jax.tree.map(lambda p: p[0], self.client_params)
+
+    # -- rounds ---------------------------------------------------------------
+
+    def hfel_round(self, assignment, n_servers: int, local_iters: int,
+                   edge_iters: int):
+        for _ in range(edge_iters):
+            self.client_params = self._local(self.client_params, self.x,
+                                             self.y, local_iters)
+            self.edge_aggregate(assignment, n_servers)
+        self.cloud_aggregate()
+
+    def fedavg_round(self, local_iters: int, edge_iters: int):
+        """Same local work (L*I), single cloud aggregation (McMahan et al.)."""
+        self.client_params = self._local(self.client_params, self.x, self.y,
+                                         local_iters * edge_iters)
+        self.cloud_aggregate()
+
+    # -- metrics ---------------------------------------------------------------
+
+    def evaluate(self) -> dict:
+        g = self.global_params()
+        test_acc = accuracy(self.logits_fn, g, jnp.asarray(self.ds.test_x),
+                            jnp.asarray(self.ds.test_y))
+        flat_x = self.x.reshape(-1, self.ds.dim)
+        flat_y = self.y.reshape(-1)
+        train_acc = accuracy(self.logits_fn, g, flat_x, flat_y)
+        train_loss = masked_loss(self.logits_fn, g, flat_x, flat_y)
+        return {"test_acc": float(test_acc), "train_acc": float(train_acc),
+                "train_loss": float(train_loss)}
+
+
+def train_federated(ds: FederatedDataset, *, method: str = "hfel",
+                    assignment=None, n_servers: int = 5,
+                    local_iters: int = 10, edge_iters: int = 5,
+                    rounds: int = 50, lr: float = 0.01, model: str = "mlr",
+                    seed: int = 0, eval_every: int = 1,
+                    round_hook: Callable | None = None) -> TrainHistory:
+    """Run ``rounds`` global iterations of HFEL or FedAvg; returns history.
+
+    ``round_hook(trainer, round_idx)`` runs before each round (failure
+    injection / straggler masking / elastic re-association).
+    """
+    trainer = FederatedTrainer(ds, model=model, lr=lr, seed=seed)
+    if assignment is None:
+        assignment = np.arange(ds.n_clients) % n_servers
+    assignment = jnp.asarray(assignment)
+    hist = TrainHistory()
+    for r in range(rounds):
+        if round_hook is not None:
+            round_hook(trainer, r)
+        if method == "hfel":
+            trainer.hfel_round(assignment, n_servers, local_iters, edge_iters)
+        elif method == "fedavg":
+            trainer.fedavg_round(local_iters, edge_iters)
+        else:
+            raise ValueError(method)
+        if r % eval_every == 0 or r == rounds - 1:
+            m = trainer.evaluate()
+            hist.test_acc.append(m["test_acc"])
+            hist.train_acc.append(m["train_acc"])
+            hist.train_loss.append(m["train_loss"])
+    return hist

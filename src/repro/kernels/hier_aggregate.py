@@ -1,0 +1,46 @@
+"""Hierarchical weighted aggregation — Pallas TPU kernel.
+
+The edge/cloud model average (paper eqs. 8 / 14) over C stacked client
+updates is memory-bound: a naive HLO chain reads the (C, P) stack several
+times (multiply, add-reduce, divide). The kernel fuses normalize + weight +
+reduce into a single pass: parameter dimension tiled across the grid, the
+full client axis resident per tile, f32 accumulation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _agg_kernel(u_ref, w_ref, o_ref):
+    w = w_ref[...].astype(jnp.float32)                      # (C,)
+    w = w / jnp.maximum(jnp.sum(w), 1e-30)
+    u = u_ref[...].astype(jnp.float32)                      # (C, bp)
+    o_ref[...] = jnp.dot(w, u,
+                         preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def hier_aggregate(updates, weights, *, block_p: int = 65_536,
+                   interpret: bool = False):
+    """updates: (C, P); weights: (C,) -> weighted average (P,)."""
+    c, p = updates.shape
+    block_p = min(block_p, p)
+    pad = (-p) % block_p
+    if pad:
+        updates = jnp.pad(updates, ((0, 0), (0, pad)))
+    n_blocks = updates.shape[1] // block_p
+
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((c, block_p), lambda i: (0, i)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_p,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((updates.shape[1],), updates.dtype),
+        interpret=interpret,
+    )(updates, weights)
+    return out[:p] if pad else out

@@ -1,0 +1,65 @@
+"""Mamba2 SSD inter-chunk state recurrence — Pallas TPU kernel.
+
+The chunked SSD algorithm reduces the sequential work to a short recurrence
+over per-chunk states:  S_{c+1} = decay_c * S_c + states_c.  The kernel runs
+one (batch, head) tile per grid cell with the full chunk axis walked by a
+``fori_loop`` whose (N, P) carry stays in VMEM — no HBM round-trip between
+chunks (the pure-JAX ``lax.scan`` reads/writes the carry through HBM each
+step).
+
+Emits the state ENTERING each chunk (what the intra-chunk pass consumes)
+plus the final state (the decode/serving handoff).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scan_kernel(states_ref, decay_ref, init_ref, entering_ref, final_ref):
+    nc = states_ref.shape[0]
+    n, p = states_ref.shape[3], states_ref.shape[4]
+
+    def body(c, carry):
+        entering_ref[c, 0, 0] = carry.astype(entering_ref.dtype)
+        dec = decay_ref[c, 0, 0]
+        new = carry * dec + states_ref[c, 0, 0].astype(jnp.float32)
+        return new
+
+    carry0 = init_ref[0, 0].astype(jnp.float32)
+    final = jax.lax.fori_loop(0, nc, body, carry0)
+    final_ref[0, 0] = final.astype(final_ref.dtype)
+
+
+def ssd_state_scan(states, decay, initial_state=None, *,
+                   interpret: bool = False):
+    """states: (NC, B, H, N, P); decay: (NC, B, H).
+
+    Returns (entering (NC, B, H, N, P), final (B, H, N, P)).
+    """
+    nc, b, h, n, p = states.shape
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, n, p), states.dtype)
+    decay_b = jnp.broadcast_to(decay[..., None, None], states.shape)
+
+    entering, final = pl.pallas_call(
+        _scan_kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((nc, 1, 1, n, p), lambda b_, h_: (0, b_, h_, 0, 0)),
+            pl.BlockSpec((nc, 1, 1, n, p), lambda b_, h_: (0, b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda b_, h_: (b_, h_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((nc, 1, 1, n, p), lambda b_, h_: (0, b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda b_, h_: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(states.shape, states.dtype),
+            jax.ShapeDtypeStruct((b, h, n, p), states.dtype),
+        ],
+        interpret=interpret,
+    )(states, decay_b, initial_state)
+    return entering, final

@@ -1,0 +1,2 @@
+# NOTE: repro.launch.dryrun must be imported/run in its own process (it sets
+# XLA_FLAGS before jax init). Import submodules directly.

@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost analysis and roofline terms.
+
+MUST be run as its own process (the XLA_FLAGS line above is read at first
+jax initialization):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape train_4k --mesh single --mode sync --out experiments/dryrun
+
+Two compiles per cell:
+  * PROOF — the full config with scanned layers (compact HLO): this is the
+    deliverable "lower+compile succeeds on the production mesh", and the
+    source of memory_analysis().
+  * PROBES — 1-unit and 2-unit deep UNROLLED configs: XLA cost analysis
+    counts while-loop bodies exactly once, so the scanned program
+    under-reports FLOPs/bytes/collectives by ~n_layers; unrolling the full
+    depth is compile-prohibitive. Two shallow probes give the exact
+    per-layer slope, extrapolated linearly to the full depth (layers are
+    homogeneous, so the slope is exact modulo fusion edge effects).
+
+Modes: ``sync`` (baseline full synchronization), ``hierarchical`` (HFEL
+pod-local training; also lowers the per-I-steps cloud sync and reports its
+amortized cost). Decode shapes lower ``serve_step`` instead of
+``train_step``.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (CollectiveStats, parse_collectives,
+                                   roofline_terms)
+from repro.launch.steps import make_serve_step, make_train_step
+from repro.models import SHAPES, build_model, shape_applicable
+
+
+def _train_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D for training (N = active params; excludes the
+    quadratic attention term, as is standard for the 6ND accounting)."""
+    n_active = cfg.active_param_count()
+    tokens = shape.seq_len * shape.global_batch
+    return 6.0 * n_active * tokens
+
+
+def _decode_flops_estimate(cfg, shape) -> float:
+    n_active = cfg.active_param_count()
+    return 2.0 * n_active * shape.global_batch      # one token per sequence
+
+
+def _probe_layer_counts(cfg):
+    """(overrides_small, overrides_big, full_units) for the cost probes.
+
+    The extrapolation unit is one homogeneous stack layer (hybrid: one
+    period-group; encdec: one encoder + one decoder layer)."""
+    if cfg.family == "hybrid" and cfg.hybrid_attn_period:
+        p = cfg.hybrid_attn_period
+        return {"n_layers": p}, {"n_layers": 2 * p}, cfg.n_layers // p
+    if cfg.moe is not None and cfg.moe.n_dense_layers:
+        nd = cfg.moe.n_dense_layers
+        return ({"n_layers": nd + 1}, {"n_layers": nd + 2},
+                cfg.n_layers - nd)
+    if cfg.family == "encdec":
+        return ({"n_layers": 1, "n_encoder_layers": 1},
+                {"n_layers": 2, "n_encoder_layers": 2}, cfg.n_layers)
+    return {"n_layers": 1}, {"n_layers": 2}, cfg.n_layers
+
+
+def _lower_step(cfg, shape, mesh, mode, sharding_mode):
+    model = build_model(cfg)
+    if shape.kind == "decode":
+        bundle = make_serve_step(model, mesh, shape,
+                                 sharding_mode=sharding_mode)
+        tok_spec = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+        return bundle, bundle.step_fn.lower(bundle.params_spec,
+                                            bundle.cache_spec, tok_spec)
+    bundle = make_train_step(model, mesh, shape, mode=mode,
+                             sharding_mode=sharding_mode)
+    step_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    return bundle, bundle.step_fn.lower(bundle.params_spec, bundle.opt_spec,
+                                        step_spec, bundle.batch_spec)
+
+
+def _compile_costs(lowered) -> dict:
+    compiled = lowered.compile()
+    cost = dict(compiled.cost_analysis() or {})
+    coll = parse_collectives(compiled.as_text(), pod_size=256)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "wire": coll.wire_bytes,
+        "cross_pod": coll.cross_pod_bytes,
+        "counts": coll.counts,
+    }
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             mode: str = "sync", sharding_mode: str = "fsdp",
+             edge_period: int = 10, probe: bool = True,
+             overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 512 if multi_pod else 256
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mode": mode, "sharding": sharding_mode,
+    }
+
+    # --- proof compile: the FULL config, scanned layers --------------------
+    t0 = time.time()
+    bundle, lowered = _lower_step(cfg, shape, mesh, mode, sharding_mode)
+    result["lower_s"] = round(time.time() - t0, 1)
+    t0 = time.time()
+    compiled = lowered.compile()
+    result["compile_s"] = round(time.time() - t0, 1)
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                result[attr] = int(v)
+        result["per_device_bytes"] = int(
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0))
+
+    # --- cost probes --------------------------------------------------------
+    if probe:
+        ov1, ov2, full_units = _probe_layer_counts(cfg)
+        t0 = time.time()
+        c1 = _compile_costs(_lower_step(
+            dataclasses.replace(cfg, scan_layers=False, **ov1),
+            shape, mesh, mode, sharding_mode)[1])
+        c2 = _compile_costs(_lower_step(
+            dataclasses.replace(cfg, scan_layers=False, **ov2),
+            shape, mesh, mode, sharding_mode)[1])
+        result["probe_s"] = round(time.time() - t0, 1)
+
+        def extrap(key):
+            return max(c1[key] + (c2[key] - c1[key]) * (full_units - 1), 0.0)
+
+        cost = {"flops": extrap("flops"), "bytes accessed": extrap("bytes")}
+        coll = CollectiveStats(wire_bytes=extrap("wire"),
+                               cross_pod_bytes=extrap("cross_pod"),
+                               counts=c2["counts"])
+        result["probe"] = {
+            "full_units": full_units,
+            "per_layer_flops": c2["flops"] - c1["flops"],
+            "per_layer_wire_bytes": c2["wire"] - c1["wire"],
+        }
+    else:
+        cost = dict(compiled.cost_analysis() or {})
+        coll = parse_collectives(compiled.as_text(), pod_size=256)
+
+    result["flops_per_partition"] = float(cost.get("flops", 0.0))
+    result["bytes_per_partition"] = float(cost.get("bytes accessed", 0.0))
+
+    model_flops = (_decode_flops_estimate(cfg, shape)
+                   if shape.kind == "decode"
+                   else _train_flops_estimate(cfg, shape))
+    terms = roofline_terms(cost, coll, n_chips=n_chips,
+                           model_flops=model_flops)
+    result["roofline"] = terms.as_dict()
+
+    # hierarchical mode: also lower + compile the cloud sync and amortize
+    if mode == "hierarchical" and bundle.cloud_sync_fn is not None:
+        sync_compiled = bundle.cloud_sync_fn.lower(
+            bundle.params_spec, bundle.opt_spec).compile()
+        sync_coll = parse_collectives(sync_compiled.as_text(), pod_size=256)
+        sync_cost = dict(sync_compiled.cost_analysis() or {})
+        sync_terms = roofline_terms(sync_cost, sync_coll, n_chips=n_chips)
+        result["cloud_sync"] = sync_terms.as_dict()
+        result["edge_period"] = edge_period
+        result["roofline"]["collective_s_amortized"] = (
+            terms.collective_s + sync_terms.collective_s / edge_period)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--mode", default="sync",
+                    choices=["sync", "hierarchical"])
+    ap.add_argument("--sharding", default="fsdp", choices=["fsdp", "tp"])
+    ap.add_argument("--edge-period", type=int, default=10)
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip cost probes (compile proof only)")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            if not shape_applicable(cfg, SHAPES[shape_name]):
+                print(f"SKIP {arch} x {shape_name} (see DESIGN.md "
+                      "§Arch-applicability)", flush=True)
+                continue
+            for multi_pod in meshes:
+                mesh_tag = "multi" if multi_pod else "single"
+                tag = f"{arch}__{shape_name}__{mesh_tag}__{args.mode}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"SKIP {tag} (exists)", flush=True)
+                    continue
+                try:
+                    # probes drive the single-pod roofline table only
+                    res = run_cell(arch, shape_name, multi_pod=multi_pod,
+                                   mode=args.mode,
+                                   sharding_mode=args.sharding,
+                                   edge_period=args.edge_period,
+                                   probe=not args.no_probe and not multi_pod)
+                    with open(path, "w") as f:
+                        json.dump(res, f, indent=1)
+                    r = res["roofline"]
+                    print(f"OK   {tag}: compile={res['compile_s']}s "
+                          f"probe={res.get('probe_s', 0)}s "
+                          f"dominant={r['dominant']} "
+                          f"(c={r['compute_s']:.4f}s m={r['memory_s']:.4f}s "
+                          f"x={r['collective_s']:.4f}s)", flush=True)
+                except Exception as e:
+                    failures += 1
+                    with open(path + ".err", "w") as f:
+                        f.write(traceback.format_exc())
+                    print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

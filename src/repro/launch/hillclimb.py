@@ -1,0 +1,83 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb runner: re-lowers a dry-run cell with one named
+optimization applied and records the roofline delta vs. the baseline JSON.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb \
+        --cell qwen2-7b:train_4k --opt flash_vjp --out experiments/dryrun
+
+Optimizations (composable via comma):
+  flash_vjp   — custom-VJP flash backward for blocked attention
+                (replaces autodiff-through-scan; kills the O(tiles^2)
+                carry traffic)
+  tp_only     — sharding_mode="tp": drop FSDP parameter sharding over
+                `data` (no per-layer param all-gathers; params replicated)
+  full_sched  — attention schedule "full" (masked full computation; this is
+                the DE-optimization used to quantify the triangle schedule)
+  hierarchical— HFEL pod-local training on the multi-pod mesh (collective
+                term reports the amortized cloud sync at --edge-period)
+  no_remat    — disable activation rematerialization (memory for FLOPs)
+"""
+
+import argparse
+import json
+
+from repro.launch.dryrun import run_cell
+
+
+def apply_opts(opts: list[str]):
+    overrides = {}
+    kwargs = {"mode": "sync", "sharding_mode": "fsdp", "multi_pod": False}
+    for opt in opts:
+        if opt == "flash_vjp":
+            overrides["attn_vjp"] = "flash"
+        elif opt == "tp_only":
+            kwargs["sharding_mode"] = "tp"
+        elif opt == "no_remat":
+            overrides["remat"] = "none"
+        elif opt == "hierarchical":
+            kwargs["mode"] = "hierarchical"
+            kwargs["multi_pod"] = True
+        elif opt == "baseline":
+            pass
+        else:
+            raise ValueError(opt)
+    return overrides, kwargs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--opt", required=True,
+                    help="comma list: flash_vjp,tp_only,hierarchical,"
+                         "no_remat,baseline")
+    ap.add_argument("--edge-period", type=int, default=10)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    arch, shape = args.cell.split(":")
+    opts = args.opt.split(",")
+    overrides, kwargs = apply_opts(opts)
+    if args.multi_pod:
+        kwargs["multi_pod"] = True
+
+    res = run_cell(arch, shape, overrides=overrides,
+                   edge_period=args.edge_period, probe=True, **kwargs)
+    res["opts"] = opts
+    mesh_tag = "multi" if kwargs["multi_pod"] else "single"
+    tag = f"{arch}__{shape}__{mesh_tag}__{kwargs['mode']}__" + "-".join(opts)
+    path = os.path.join(args.out, tag + ".json")
+    os.makedirs(args.out, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    r = res["roofline"]
+    print(f"{tag}: dominant={r['dominant']} compute={r['compute_s']:.4f}s "
+          f"memory={r['memory_s']:.4f}s collective={r['collective_s']:.4f}s "
+          f"(amortized={r.get('collective_s_amortized', r['collective_s']):.4f}s)",
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is the
+HFEL "cloud" tier (DCN), ``data`` the "edge" tier (ICI), ``model`` tensor
+parallelism.
+
+``make_production_mesh`` is a function (not a module constant) so importing
+this module never touches jax device state — required for the dry-run's
+XLA_FLAGS ordering.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU integration tests (requires host device count)."""
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes the global batch is sharded over."""
+    if "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return ("data",)
+
+
+def n_pods(mesh) -> int:
+    return mesh.shape["pod"] if "pod" in mesh.axis_names else 1

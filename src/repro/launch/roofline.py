@@ -1,0 +1,172 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (DCN for the pod axis is modelled at 6.25 GB/s/host
+separately in the analysis notes).
+
+  compute term    = HLO_FLOPs / (chips * peak)
+  memory term     = HLO_bytes / (chips * hbm_bw)
+  collective term = collective_wire_bytes_per_chip / link_bw
+
+cost_analysis() reports whole-program FLOPs/bytes (already per-partition
+for SPMD modules). Collective bytes are parsed from the compiled HLO text:
+for each collective op we take the result shape and apply ring-algorithm
+wire formulas with the op's replica-group size.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+
+V5E = {
+    "peak_flops": 197e12,     # bf16
+    "hbm_bw": 819e9,          # bytes/s
+    "ici_bw": 50e9,           # bytes/s per link
+    "dcn_bw": 6.25e9,         # bytes/s per host (cross-pod)
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# result type is either one shape or a tuple; tuples may contain
+# /*index=N*/ comments (which contain '='), so match balanced-paren-free
+# content rather than "anything up to '='"
+_COLL_RE = re.compile(
+    r"=\s*(\([^()]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+
+
+def _iota_group_spread(n_groups: int, group_size: int, dims, perm):
+    """Expand an iota replica-group spec and return the max (max-min) id
+    spread across groups — the cross-pod classifier's input."""
+    import numpy as np
+    total = 1
+    for d in dims:
+        total *= d
+    ids = np.arange(total).reshape(dims)
+    if perm is not None:
+        ids = ids.transpose(perm)
+    flat = ids.reshape(n_groups, group_size)
+    return int((flat.max(axis=1) - flat.min(axis=1)).max())
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0          # per participating device
+    cross_pod_bytes: float = 0.0     # subset crossing the pod boundary
+    counts: dict = None
+
+    def __post_init__(self):
+        if self.counts is None:
+            self.counts = {}
+
+
+def parse_collectives(hlo_text: str, *, pod_size: int = 256) -> CollectiveStats:
+    stats = CollectiveStats()
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, opcode, _start = m.group(1), m.group(2), m.group(3)
+        result_bytes = _shape_bytes(type_str)
+        line_end = hlo_text.find("\n", m.end())
+        line = hlo_text[m.start():line_end if line_end > 0 else None]
+
+        g = _GROUPS_RE.search(line)
+        gi = _GROUPS_IOTA_RE.search(line)
+        if g:
+            members = [int(x) for x in g.group(1).split(",") if x]
+            n = max(len(members), 1)
+            spread = (max(members) - min(members)) if members else 0
+        elif gi:
+            n_groups, n = int(gi.group(1)), int(gi.group(2))
+            dims = [int(x) for x in gi.group(3).split(",")]
+            perm = ([int(x) for x in gi.group(4).split(",")]
+                    if gi.group(4) else None)
+            spread = _iota_group_spread(n_groups, n, dims, perm)
+        else:
+            n, spread = 1, 0
+        if n <= 1:
+            continue
+
+        if opcode == "all-reduce":
+            wire = 2.0 * result_bytes * (n - 1) / n
+        elif opcode == "all-gather":
+            wire = result_bytes * (n - 1) / n
+        elif opcode == "reduce-scatter":
+            wire = result_bytes * (n - 1)
+        elif opcode == "all-to-all":
+            wire = result_bytes * (n - 1) / n
+        else:  # collective-permute
+            wire = float(result_bytes)
+
+        stats.wire_bytes += wire
+        if spread >= pod_size:
+            stats.cross_pod_bytes += wire
+        key = opcode
+        stats.counts[key] = stats.counts.get(key, 0) + 1
+    return stats
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    hbm_bytes: float
+    wire_bytes: float
+    cross_pod_bytes: float
+    dominant: str
+    model_flops: float = 0.0
+    flops_ratio: float = 0.0          # MODEL_FLOPS / HLO_FLOPs (global)
+    collective_counts: dict = None
+
+    def as_dict(self):
+        return asdict(self)
+
+
+def roofline_terms(cost_analysis: dict, collectives: CollectiveStats, *,
+                   n_chips: int, per_partition: bool = True,
+                   model_flops: float = 0.0, hw=V5E) -> RooflineTerms:
+    """cost_analysis: compiled.cost_analysis(); flops/bytes accessed are
+    per-partition for SPMD-compiled modules (XLA reports the partitioned
+    program)."""
+    flops = float(cost_analysis.get("flops", 0.0))
+    raw_bytes = float(cost_analysis.get("bytes accessed", 0.0))
+    # per-chip terms
+    compute_s = flops / hw["peak_flops"]
+    memory_s = raw_bytes / hw["hbm_bw"]
+    coll_s = (collectives.wire_bytes - collectives.cross_pod_bytes) \
+        / hw["ici_bw"] + collectives.cross_pod_bytes / hw["dcn_bw"]
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    global_flops = flops * (n_chips if per_partition else 1)
+    return RooflineTerms(
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        flops=flops, hbm_bytes=raw_bytes,
+        wire_bytes=collectives.wire_bytes,
+        cross_pod_bytes=collectives.cross_pod_bytes,
+        dominant=dominant,
+        model_flops=model_flops,
+        flops_ratio=(model_flops / global_flops) if global_flops else 0.0,
+        collective_counts=collectives.counts)

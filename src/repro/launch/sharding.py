@@ -1,0 +1,160 @@
+"""GSPMD partition rules for the model zoo.
+
+Rules map parameter path suffixes to logical roles and pick concrete
+PartitionSpecs subject to divisibility by the mesh axis sizes (uneven dims
+fall back to the next candidate or replication — e.g. whisper's 51866
+vocab is not 16-divisible, so its embedding shards d_model instead).
+
+Modes:
+  * ``tp``   — tensor parallelism over ``model`` only; replicated over data.
+  * ``fsdp`` — tp + the complementary large dim sharded over ``data``
+               (ZeRO-3-style; GSPMD inserts the gather/scatter).
+
+Stacked block parameters carry a leading layer axis which is never sharded.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# (suffix regex, (model_dim_candidates, data_dim_candidates))
+# dims are indices from the END of the shape (negative indexing), tried in
+# order until one divides the axis size.
+_RULES = [
+    # embeddings: vocab over model ONLY — sharding D over data makes the
+    # unembed contraction dim sharded, and GSPMD then all-gathers the full
+    # batch of f32 logits (observed 40 GB/op). V-over-model keeps both the
+    # embed gather and the logits einsum fully local.
+    (r"embed/table$", ((-2, -1), ())),            # (V, D)
+    (r"unembed/w$", ((-1, -2), ())),              # (D, V)
+    (r"(wq|wk|wv|wi|wg)/w$", ((-1,), (-2,))),     # (D, F): F tp, D fsdp
+    (r"wo/w$", ((-2,), (-1,))),                   # (F, D): F tp, D fsdp
+    (r"wkv_a/w$", ((), (-2,))),                   # MLA down-proj (small)
+    (r"wkv_b/w$", ((-1,), (-2,))),
+    (r"router/w$", ((), (-2,))),
+    (r"experts/.*?/w$", ((-3,), (-1,))),          # (E, a, b): experts -> EP
+    (r"in_proj/w$", ((-1,), (-2,))),              # ssm
+    (r"out_proj/w$", ((-2,), (-1,))),
+    (r"conv_w$", ((-1,), ())),                    # (K, C): channels tp
+    (r"pos_embed$", ((), (-2,))),
+    (r"(a_log|d_skip|dt_bias|norm_scale|scale|bias|q_norm|k_norm|conv_b|/b)$",
+     ((), ())),
+]
+
+
+def _key_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def _pick(shape, candidates, axis_size, taken):
+    for c in candidates:
+        dim = len(shape) + c if c < 0 else c
+        if 0 <= dim < len(shape) and dim not in taken \
+                and shape[dim] % axis_size == 0 and shape[dim] >= axis_size:
+            return dim
+    return None
+
+
+def param_pspec(path_str: str, shape, mesh, *, mode: str = "fsdp") -> P:
+    if not shape:                       # scalars
+        return P()
+    model_size = mesh.shape["model"]
+    data_size = mesh.shape["data"]
+    spec = [None] * len(shape)
+    for pattern, (model_cands, data_cands) in _RULES:
+        if re.search(pattern, path_str):
+            taken = set()
+            dim = _pick(shape, model_cands, model_size, taken)
+            if dim is not None:
+                spec[dim] = "model"
+                taken.add(dim)
+            if mode == "fsdp":
+                dim = _pick(shape, data_cands, data_size, taken)
+                if dim is not None:
+                    spec[dim] = "data"
+            return P(*spec)
+    # fallback heuristic: biggest divisible dim -> model, next -> data
+    order = np.argsort(shape)[::-1]
+    taken = set()
+    for dim in order:
+        dim = int(dim)
+        if shape[dim] >= 1024 and shape[dim] % model_size == 0:
+            spec[dim] = "model"
+            taken.add(dim)
+            break
+    if mode == "fsdp":
+        for dim in order:
+            dim = int(dim)
+            if dim not in taken and shape[dim] >= 1024 \
+                    and shape[dim] % data_size == 0:
+                spec[dim] = "data"
+                break
+    return P(*spec)
+
+
+def param_shardings(params_spec, mesh, *, mode: str = "fsdp"):
+    """Pytree of NamedSharding matching a params pytree (of arrays or
+    ShapeDtypeStructs)."""
+    flat, treedef = jax.tree.flatten_with_path(params_spec)
+    out = []
+    for path, leaf in flat:
+        spec = param_pspec(_key_str(path), leaf.shape, mesh, mode=mode)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree.unflatten(treedef, out)
+
+
+def batch_pspec(mesh) -> P:
+    axes = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    return P(axes)
+
+
+def batch_shardings(batch_spec, mesh, *, batch_divisible=True):
+    """Shard every batch leaf on its leading (batch) dim when divisible."""
+    n_batch_shards = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+    def one(leaf):
+        if leaf.ndim and leaf.shape[0] % n_batch_shards == 0 \
+                and leaf.shape[0] >= n_batch_shards:
+            return NamedSharding(mesh, P(axes))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, batch_spec)
+
+
+def cache_shardings(cache_spec, mesh):
+    """Decode-cache sharding: batch dim over (pod,)data when divisible,
+    otherwise try a heads/state dim over model; else replicate.
+
+    Cache leaves are stacked (L, B, ...) — dim 1 is batch."""
+    n_batch = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    model_size = mesh.shape["model"]
+    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+    def one(leaf):
+        spec = [None] * leaf.ndim
+        if leaf.ndim >= 2 and leaf.shape[1] % n_batch == 0 \
+                and leaf.shape[1] >= n_batch:
+            spec[1] = axes
+        # shard a trailing structured dim (kv heads / ssm heads / lora rank)
+        for dim in range(leaf.ndim - 1, 1, -1):
+            if leaf.shape[dim] % model_size == 0 \
+                    and leaf.shape[dim] >= model_size:
+                spec[dim] = "model"
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, cache_spec)

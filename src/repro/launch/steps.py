@@ -1,0 +1,208 @@
+"""pjit train/serve step builders.
+
+Two training modes realize the paper's Algorithm 1 at datacenter scale:
+
+* ``sync`` — conventional fully-synchronous data parallelism: one parameter
+  copy, gradients all-reduced over every batch axis (pod + data). This is
+  the flat-FedAvg analogue and the §Perf baseline.
+
+* ``hierarchical`` (HFEL) — parameters carry a leading ``pod`` axis
+  (one copy per pod, sharded P("pod", ...)): the train step only reduces
+  gradients over the intra-pod ``data`` axis (ICI); the expensive DCN
+  ``pod``-axis reduction happens once per I steps in
+  :func:`make_cloud_sync_step` — eq. (8) every step, eq. (14) every I-th.
+  Optionally the pod-sync payload goes through the compression operators.
+
+Serving (``make_serve_step``) is one greedy decode step over a sharded KV /
+state cache.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.sharding import (batch_shardings, cache_shardings,
+                                   param_pspec, param_shardings, _key_str)
+from repro.models import pjit_hints
+from repro.models.model import Model, ShapeSpec
+from repro.optim import adamw, apply_updates, clip_by_global_norm
+
+
+
+def _hier_param_shardings(params_spec, mesh, *, mode="fsdp"):
+    """Shardings for pod-stacked parameters: P('pod', <per-param rules>)."""
+    flat, treedef = jax.tree.flatten_with_path(params_spec)
+    out = []
+    for path, leaf in flat:
+        inner = param_pspec(_key_str(path), leaf.shape[1:], mesh, mode=mode)
+        out.append(NamedSharding(mesh, P("pod", *inner)))
+    return jax.tree.unflatten(treedef, out)
+
+
+@dataclass
+class TrainStepBundle:
+    step_fn: Any               # jitted train step
+    cloud_sync_fn: Any | None  # jitted pod sync (hierarchical mode only)
+    params_spec: Any           # ShapeDtypeStructs
+    opt_spec: Any
+    batch_spec: Any
+    params_shardings: Any
+    opt_shardings: Any
+    batch_shardings: Any
+
+
+def make_optimizer(lr: float = 3e-4, clip: float = 1.0):
+    return clip_by_global_norm(adamw(lr), clip)
+
+
+def make_train_step(model: Model, mesh, shape: ShapeSpec, *,
+                    mode: str = "sync", sharding_mode: str = "fsdp",
+                    lr: float = 3e-4, donate: bool = True,
+                    compressor=None) -> TrainStepBundle:
+    cfg = model.cfg
+    opt = make_optimizer(lr)
+    n_pods = mesh.shape.get("pod", 1)
+    hierarchical = mode == "hierarchical"
+    if hierarchical:
+        assert n_pods > 1, "hierarchical mode needs a pod axis"
+
+    params_spec = jax.eval_shape(model.init, jax.random.key(0))
+    if hierarchical:
+        params_spec = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct((n_pods,) + l.shape, l.dtype),
+            params_spec)
+    opt_spec = jax.eval_shape(opt.init, params_spec)
+    batch_spec = model.batch_specs(shape)
+
+    p_shard = (_hier_param_shardings(params_spec, mesh, mode=sharding_mode)
+               if hierarchical
+               else param_shardings(params_spec, mesh, mode=sharding_mode))
+    o_shard = param_shardings(opt_spec, mesh, mode=sharding_mode) \
+        if not hierarchical else _hier_param_shardings(opt_spec, mesh,
+                                                       mode=sharding_mode)
+    b_shard = batch_shardings(batch_spec, mesh)
+
+    if hierarchical:
+        hints = pjit_hints.from_mesh(mesh, inside_pod_vmap=True)
+
+        def loss_fn(params, batch):
+            # split the global batch across pods; pair pod p's parameters
+            # with pod p's sub-batch — vmapped with spmd_axis_name so the
+            # mapped dim shards over 'pod' and no cross-pod reduction exists
+            def reshape(leaf):
+                return leaf.reshape((n_pods, leaf.shape[0] // n_pods)
+                                    + leaf.shape[1:])
+
+            pod_batch = jax.tree.map(reshape, batch)
+            with pjit_hints.hints_ctx(hints):
+                losses = jax.vmap(model.loss, spmd_axis_name="pod")(
+                    params, pod_batch)
+            return jnp.mean(losses)
+    else:
+        hints = pjit_hints.from_mesh(mesh)
+
+        def loss_fn(params, batch):
+            with pjit_hints.hints_ctx(hints):
+                return model.loss(params, batch)
+
+    def train_step(params, opt_state, step, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if hierarchical:
+            updates, opt_state = jax.vmap(
+                lambda g, s, p: opt.update(g, s, p, step)
+            )(grads, opt_state, params)
+        else:
+            updates, opt_state = opt.update(grads, opt_state, params, step)
+        params = apply_updates(params, updates)
+        return params, opt_state, step + 1, loss
+
+    repl = NamedSharding(mesh, P())
+    step_fn = jax.jit(
+        train_step,
+        in_shardings=(p_shard, o_shard, repl, b_shard),
+        out_shardings=(p_shard, o_shard, repl, repl),
+        donate_argnums=(0, 1) if donate else ())
+
+    cloud_sync_fn = None
+    if hierarchical:
+        def cloud_sync(params, opt_state):
+            """eq. (14): average parameters (and moments) across pods."""
+            def avg(leaf):
+                if compressor is not None:
+                    mean = jnp.mean(leaf, axis=0, keepdims=True)
+                    delta = leaf - mean            # pod-local residual
+                    delta, _ = compressor.compress(delta,
+                                                   jnp.zeros_like(delta))
+                    leaf = mean + delta
+                m = jnp.mean(leaf, axis=0, keepdims=True)
+                return jnp.broadcast_to(m, leaf.shape)
+
+            return (jax.tree.map(avg, params),
+                    jax.tree.map(avg, opt_state))
+
+        cloud_sync_fn = jax.jit(
+            cloud_sync,
+            in_shardings=(p_shard, o_shard),
+            out_shardings=(p_shard, o_shard),
+            donate_argnums=(0, 1) if donate else ())
+
+    return TrainStepBundle(step_fn, cloud_sync_fn, params_spec, opt_spec,
+                           batch_spec, p_shard, o_shard, b_shard)
+
+
+@dataclass
+class ServeStepBundle:
+    step_fn: Any
+    params_spec: Any
+    cache_spec: Any
+    params_shardings: Any
+    cache_shardings: Any
+    token_sharding: Any
+
+
+def make_serve_step(model: Model, mesh, shape: ShapeSpec, *,
+                    sharding_mode: str = "fsdp",
+                    donate: bool = True) -> ServeStepBundle:
+    cfg = model.cfg
+    params_spec = jax.eval_shape(model.init, jax.random.key(0))
+    p_shard = param_shardings(params_spec, mesh, mode=sharding_mode)
+
+    b = shape.global_batch
+    if cfg.family == "encdec":
+        frames_spec = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+        cache_spec = jax.eval_shape(
+            lambda p, f: model.decode_init(p, {"frames": f},
+                                           shape.seq_len),
+            params_spec, frames_spec)
+    else:
+        cache_spec, _ = model.decode_specs(shape)
+    c_shard = cache_shardings(cache_spec, mesh)
+
+    n_batch = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    tok_shard = NamedSharding(
+        mesh, P(axes) if b % n_batch == 0 and b >= n_batch else P())
+
+    hints = pjit_hints.from_mesh(mesh)
+
+    def serve_step(params, cache, tokens):
+        with pjit_hints.hints_ctx(hints):
+            logits, cache = model.decode_step(params, cache, tokens)
+            next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, cache
+
+    step_fn = jax.jit(
+        serve_step,
+        in_shardings=(p_shard, c_shard, tok_shard),
+        out_shardings=(tok_shard, c_shard),
+        donate_argnums=(1,) if donate else ())
+
+    return ServeStepBundle(step_fn, params_spec, cache_spec, p_shard,
+                           c_shard, tok_shard)

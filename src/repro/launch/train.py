@@ -1,0 +1,121 @@
+"""Production training launcher.
+
+On a TPU slice this runs the pjit'd HFEL-hierarchical (or sync-baseline)
+train step over the production mesh with checkpointing, retry, and the
+paper's L/I sync schedule. On CPU it accepts a --devices override for a
+small host mesh so the full path is exercisable in tests.
+
+    python -m repro.launch.train --arch qwen3-0.6b --shape train_4k \
+        --mode hierarchical --edge-period 10 --steps 100
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import TokenPipeline
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.launch.steps import make_train_step
+from repro.models import SHAPES, ShapeSpec, build_model
+from repro.runtime import retry_with_backoff
+
+
+def build(args):
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(dtype="float32")
+    model = build_model(cfg)
+    if args.devices:
+        shape_axes = [int(x) for x in args.devices.split("x")]
+        if len(shape_axes) == 3:
+            mesh = make_test_mesh(tuple(shape_axes),
+                                  ("pod", "data", "model"))
+        else:
+            mesh = make_test_mesh(tuple(shape_axes), ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=args.mode == "hierarchical")
+    shape = SHAPES[args.shape]
+    if args.reduced:
+        n_shards = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                                if a != "model"]))
+        shape = ShapeSpec(shape.name, seq_len=128,
+                          global_batch=max(n_shards, 2), kind="train")
+    bundle = make_train_step(model, mesh, shape, mode=args.mode, lr=args.lr)
+    return cfg, model, mesh, shape, bundle
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mode", default="sync",
+                    choices=["sync", "hierarchical"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--edge-period", type=int, default=10,
+                    help="I: steps between cloud (pod) syncs")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--devices", default=None,
+                    help="host test mesh, e.g. 2x2 or 2x2x1")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config/shape (CPU integration runs)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg, model, mesh, shape, bundle = build(args)
+    n_pods = mesh.shape.get("pod", 1)
+    print(f"mesh {dict(mesh.shape)} | {args.arch} | mode={args.mode} "
+          f"| batch {shape.global_batch} x seq {shape.seq_len}")
+
+    with jax.set_mesh(mesh):
+        params = jax.jit(
+            model.init, out_shardings=(
+                bundle.params_shardings if args.mode != "hierarchical"
+                else None))(jax.random.key(args.seed))
+        if args.mode == "hierarchical":
+            params = jax.device_put(
+                jax.tree.map(
+                    lambda p: jnp.broadcast_to(p, (n_pods,) + p.shape),
+                    params),
+                bundle.params_shardings)
+        opt = make_opt_state(bundle, params)
+        step = jnp.zeros((), jnp.int32)
+
+        mgr = CheckpointManager(args.ckpt_dir, keep=2)
+        pipe = TokenPipeline(cfg.vocab_size, shape.seq_len,
+                             shape.global_batch, seed=args.seed)
+        t0 = time.time()
+        for k in range(args.steps):
+            batch = {"tokens": jax.device_put(
+                jnp.asarray(next(pipe)),
+                bundle.batch_shardings["tokens"])}
+            params, opt, step, loss = retry_with_backoff(
+                lambda: bundle.step_fn(params, opt, step, batch))
+            if args.mode == "hierarchical" and \
+                    (k + 1) % args.edge_period == 0:
+                params, opt = bundle.cloud_sync_fn(params, opt)
+            if (k + 1) % args.ckpt_every == 0:
+                mgr.save(k + 1, {"params": params})
+            if k % 10 == 0 or k == args.steps - 1:
+                print(f"step {k:5d} loss {float(loss):.4f} "
+                      f"({time.time()-t0:.1f}s)", flush=True)
+        mgr.wait()
+
+
+def make_opt_state(bundle, params):
+    from repro.launch.steps import make_optimizer
+    opt = make_optimizer()
+    return jax.jit(opt.init, out_shardings=bundle.opt_shardings)(params)
+
+
+if __name__ == "__main__":
+    main()

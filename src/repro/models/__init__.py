@@ -1,0 +1,6 @@
+from repro.models.config import MLAConfig, MoEConfig, ModelConfig, SSMConfig
+from repro.models.model import (Model, ShapeSpec, SHAPES, build_model,
+                                shape_applicable)
+
+__all__ = ["MLAConfig", "MoEConfig", "ModelConfig", "SSMConfig", "Model",
+           "ShapeSpec", "SHAPES", "build_model", "shape_applicable"]

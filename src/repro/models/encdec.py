@@ -1,0 +1,187 @@
+"""Encoder-decoder (Whisper backbone).
+
+The audio frontend (mel + conv downsampling) is a STUB per the assignment:
+``frames`` arrive as precomputed post-conv frame embeddings
+(B, encoder_seq_len, d_model). Encoder uses sinusoidal positions and full
+self-attention; decoder uses learned positions, causal self-attention and
+cross-attention to the encoder output. LayerNorm + GELU, tied unembedding —
+Whisper conventions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (blocked_attention, cached_attention,
+                                    attention_init, cross_kv, dense,
+                                    init_kv_cache)
+from repro.models.layers import (apply_norm, cross_entropy, embed,
+                                 embedding_init, mlp, mlp_init, norm_init,
+                                 sinusoidal_positions, unembed)
+
+
+def _norm(cfg):
+    return norm_init(cfg.d_model, kind=cfg.norm_type)
+
+
+def _an(cfg, p, x):
+    return apply_norm(p, x, kind=cfg.norm_type)
+
+
+def _self_attn(params, cfg, x, *, causal):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = dense(params["wq"], x).reshape(b, s, cfg.n_heads, hd)
+    k = dense(params["wk"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    v = dense(params["wv"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    out = blocked_attention(q, k, v, causal=causal,
+                            schedule="triangle" if causal else "full",
+                            block_q=cfg.attn_block_q,
+                            block_kv=cfg.attn_block_kv)
+    return dense(params["wo"], out.reshape(b, s, -1))
+
+
+def _cross_attn(params, cfg, x, kv):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = dense(params["wq"], x).reshape(b, s, cfg.n_heads, hd)
+    out = blocked_attention(q, kv[0], kv[1], causal=False, schedule="full",
+                            block_q=cfg.attn_block_q,
+                            block_kv=cfg.attn_block_kv)
+    return dense(params["wo"], out.reshape(b, s, -1))
+
+
+def enc_block_init(rng, cfg):
+    k1, k2 = jax.random.split(rng)
+    return {"norm1": _norm(cfg), "attn": attention_init(k1, cfg),
+            "norm2": _norm(cfg),
+            "ffn": mlp_init(k2, cfg.d_model, cfg.d_ff, kind=cfg.mlp_type)}
+
+
+def dec_block_init(rng, cfg):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {"norm1": _norm(cfg), "self_attn": attention_init(k1, cfg),
+            "norm_x": _norm(cfg), "cross_attn": attention_init(k2, cfg),
+            "norm2": _norm(cfg),
+            "ffn": mlp_init(k3, cfg.d_model, cfg.d_ff, kind=cfg.mlp_type)}
+
+
+def encdec_init(cfg, rng):
+    ke, kd, kt, kp = jax.random.split(rng, 4)
+    return {
+        "enc_blocks": jax.vmap(lambda k: enc_block_init(k, cfg))(
+            jax.random.split(ke, cfg.n_encoder_layers)),
+        "enc_norm": _norm(cfg),
+        "embed": embedding_init(kt, cfg.vocab_size, cfg.d_model),
+        "pos_embed": jax.random.normal(
+            kp, (cfg.max_seq_len, cfg.d_model)) * 0.01,
+        "dec_blocks": jax.vmap(lambda k: dec_block_init(k, cfg))(
+            jax.random.split(kd, cfg.n_layers)),
+        "dec_norm": _norm(cfg),
+    }
+
+
+def encode(params, cfg, frames):
+    """frames: (B, S_enc, d) stub embeddings -> encoder states."""
+    s = frames.shape[1]
+    x = frames + sinusoidal_positions(s, cfg.d_model).astype(frames.dtype)
+
+    def body(h, bp):
+        h = h + _self_attn(bp["attn"], cfg, _an(cfg, bp["norm1"], h),
+                           causal=False)
+        h = h + mlp(bp["ffn"], _an(cfg, bp["norm2"], h), kind=cfg.mlp_type)
+        return h, None
+
+    fn = jax.checkpoint(body) if cfg.remat != "none" else body
+    x, _ = jax.lax.scan(fn, x, params["enc_blocks"])
+    return _an(cfg, params["enc_norm"], x)
+
+
+def encdec_forward(params, cfg, frames, tokens):
+    """Teacher-forced forward: logits (B, S_dec, V)."""
+    enc = encode(params, cfg, frames)
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens).astype(enc.dtype)
+    x = x + params["pos_embed"][:s].astype(x.dtype)
+
+    def body(h, bp):
+        h = h + _self_attn(bp["self_attn"], cfg, _an(cfg, bp["norm1"], h),
+                           causal=True)
+        kv = cross_kv(bp["cross_attn"], cfg, enc)
+        h = h + _cross_attn(bp["cross_attn"], cfg, _an(cfg, bp["norm_x"], h),
+                            kv)
+        h = h + mlp(bp["ffn"], _an(cfg, bp["norm2"], h), kind=cfg.mlp_type)
+        return h, None
+
+    fn = jax.checkpoint(body) if cfg.remat != "none" else body
+    x, _ = jax.lax.scan(fn, x, params["dec_blocks"])
+    x = _an(cfg, params["dec_norm"], x)
+    return unembed(params["embed"], x)
+
+
+def encdec_loss(params, cfg, batch):
+    tokens = batch["tokens"]
+    logits = encdec_forward(params, cfg, batch["frames"], tokens[:, :-1])
+    return cross_entropy(logits, tokens[:, 1:], batch.get("loss_mask"))
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def encdec_decode_init(params, cfg, frames, max_len: int,
+                       dtype=jnp.bfloat16):
+    """Run the encoder once; precompute per-layer cross K/V; empty self cache."""
+    enc = encode(params, cfg, frames)
+    batch = frames.shape[0]
+
+    def layer_kv(bp):
+        k, v = cross_kv(bp["cross_attn"], cfg, enc)
+        return {"k": k.astype(dtype), "v": v.astype(dtype)}
+
+    cross = jax.vmap(lambda bp: layer_kv(bp))(params["dec_blocks"])
+    self_cache = jax.vmap(
+        lambda _: init_kv_cache(cfg, batch, max_len, dtype)
+    )(jnp.arange(cfg.n_layers))
+    return {"cross": cross, "self": self_cache,
+            "position": jnp.zeros((batch,), jnp.int32)}
+
+
+def encdec_decode_step(params, cfg, cache, tokens):
+    """tokens: (B,) -> (logits (B, V), new cache)."""
+    b = tokens.shape[0]
+    hd = cfg.resolved_head_dim
+    pos = cache["position"]
+    x = embed(params["embed"], tokens[:, None])
+    x = x + jnp.take(params["pos_embed"], pos, axis=0)[:, None].astype(x.dtype)
+
+    def body(x, xs):
+        bp, sc, cc = xs
+        h = _an(cfg, bp["norm1"], x)
+        q = dense(bp["self_attn"]["wq"], h).reshape(b, 1, cfg.n_heads, hd)
+        k = dense(bp["self_attn"]["wk"], h).reshape(b, 1, cfg.n_kv_heads, hd)
+        v = dense(bp["self_attn"]["wv"], h).reshape(b, 1, cfg.n_kv_heads, hd)
+        idx = sc["length"][:, None, None, None]
+        onehot = (jnp.arange(sc["k"].shape[1])[None, :, None, None] == idx)
+        kc = jnp.where(onehot, k.astype(sc["k"].dtype), sc["k"])
+        vc = jnp.where(onehot, v.astype(sc["v"].dtype), sc["v"])
+        out = cached_attention(q, kc, vc, sc["length"] + 1)
+        x = x + dense(bp["self_attn"]["wo"], out.reshape(b, 1, -1))
+        new_sc = {"k": kc, "v": vc, "length": sc["length"] + 1}
+
+        h = _an(cfg, bp["norm_x"], x)
+        q = dense(bp["cross_attn"]["wq"], h).reshape(b, 1, cfg.n_heads, hd)
+        enc_len = jnp.full((b,), cc["k"].shape[1], jnp.int32)
+        out = cached_attention(q, cc["k"], cc["v"], enc_len)
+        x = x + dense(bp["cross_attn"]["wo"], out.reshape(b, 1, -1))
+
+        x = x + mlp(bp["ffn"], _an(cfg, bp["norm2"], x), kind=cfg.mlp_type)
+        return x, new_sc
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["self"], cache["cross"]))
+    x = _an(cfg, params["dec_norm"], x)
+    logits = unembed(params["embed"], x)
+    return logits[:, 0], {"cross": cache["cross"], "self": new_self,
+                          "position": pos + 1}

@@ -1,0 +1,164 @@
+"""Shared neural-net building blocks (pure JAX, parameter dicts).
+
+Parameters are nested dicts of jnp arrays. Every block is a pair of plain
+functions: ``<block>_init(rng, ...) -> params`` and
+``<block>(params, x, ...) -> y``. Per-layer parameters are *stacked* along a
+leading layer axis by the model builders and consumed under ``lax.scan`` so
+that deep configs (64 layers) lower to compact HLO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(rng, d_in: int, d_out: int, *, scale: float | None = None,
+               bias: bool = False, dtype=jnp.float32):
+    scale = scale if scale is not None else d_in ** -0.5
+    w = jax.random.normal(rng, (d_in, d_out), dtype) * scale
+    if bias:
+        return {"w": w, "b": jnp.zeros((d_out,), dtype)}
+    return {"w": w}
+
+
+def dense(params, x):
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+def embedding_init(rng, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(rng, (vocab, d), dtype) * 0.02}
+
+
+def embed(params, ids):
+    return jnp.take(params["table"], ids, axis=0)
+
+
+def unembed(params, x):
+    """Tied read-out: logits = x @ table^T (activation dtype; the loss
+    upcasts elementwise inside its reductions — materializing f32 logits
+    would double the dominant memory-bound tensor of the train step)."""
+    return x @ params["table"].astype(x.dtype).T
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def norm_init(d: int, *, kind: str = "rmsnorm", parametric: bool = True,
+              dtype=jnp.float32):
+    p = {}
+    if parametric:
+        p["scale"] = jnp.ones((d,), dtype)
+        if kind == "layernorm":
+            p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(params, x, *, kind: str = "rmsnorm", eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        xf = xf - jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    if "scale" in params:
+        y = y * params["scale"].astype(jnp.float32)
+    if "bias" in params:
+        y = y + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_heads(x, scale, eps: float = 1e-6):
+    """Per-head qk-norm (qwen3): x (..., H, hd), scale (hd,).
+
+    Statistics in f32; the normalized product is emitted in x.dtype so no
+    f32 activation tensor survives into the backward pass."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * scale.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(rng, d: int, d_ff: int, *, kind: str = "swiglu", dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    if kind == "swiglu":
+        return {"wi": dense_init(k1, d, d_ff, dtype=dtype),
+                "wg": dense_init(k2, d, d_ff, dtype=dtype),
+                "wo": dense_init(k3, d_ff, d, dtype=dtype)}
+    return {"wi": dense_init(k1, d, d_ff, dtype=dtype),
+            "wo": dense_init(k2, d_ff, d, dtype=dtype)}
+
+
+def mlp(params, x, *, kind: str = "swiglu"):
+    from repro.models import pjit_hints
+    if kind == "swiglu":
+        h = jax.nn.silu(dense(params["wg"], x)) * dense(params["wi"], x)
+    else:
+        h = jax.nn.gelu(dense(params["wi"], x))
+    if h.ndim == 3:
+        h = pjit_hints.shard_ffn(h)
+    return dense(params["wo"], h)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S).
+
+    The rotation tables are computed in f32 then cast to x.dtype so the
+    elementwise math stays in the activation dtype — f32 intermediates here
+    double the backward's activation traffic for zero benefit (the tables
+    are position-only constants).
+    """
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                        # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :].astype(x.dtype)        # (..., S, 1, ·)
+    sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1)
+
+
+def sinusoidal_positions(seq_len: int, d: int) -> jnp.ndarray:
+    """Whisper-style fixed positional embeddings, (S, d)."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / (10_000.0 ** (dim / d))
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean next-token CE in f32. logits (..., V), labels (...) int.
+
+    The gold logit is selected with an iota-compare + masked sum rather than
+    take_along_axis: a vocab-sharded logits tensor then reduces to a tiny
+    (B, S) all-reduce under GSPMD instead of an all-gather of the logits.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jnp.arange(logits.shape[-1], dtype=labels.dtype)
+    onehot = (vocab_iota == labels[..., None])
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,123 @@
+"""Model facade: a uniform init/loss/decode interface over all families,
+plus input-shape builders for the assigned (arch x shape) grid."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "train"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# pure full-attention archs skip long_500k (no sub-quadratic mechanism);
+# see DESIGN.md §Arch-applicability.
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> bool:
+    if shape.name == "long_500k":
+        return cfg.family in SUBQUADRATIC_FAMILIES
+    return True
+
+
+class Model:
+    """Family-dispatched facade used by the FL runtime, launcher and dryrun."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- parameters ---------------------------------------------------------
+
+    def init(self, rng):
+        if self.cfg.family == "encdec":
+            return encdec.encdec_init(self.cfg, rng)
+        return transformer.lm_init(self.cfg, rng)
+
+    # -- training -----------------------------------------------------------
+
+    def loss(self, params, batch):
+        if self.cfg.family == "encdec":
+            return encdec.encdec_loss(params, self.cfg, batch)
+        return transformer.lm_loss(params, self.cfg, batch)
+
+    def logits(self, params, batch):
+        if self.cfg.family == "encdec":
+            return encdec.encdec_forward(params, self.cfg, batch["frames"],
+                                         batch["tokens"][:, :-1])
+        out, _ = transformer.lm_forward(
+            params, self.cfg, batch["tokens"][:, :-1],
+            prefix_embeds=batch.get("prefix_embeds"))
+        return out
+
+    # -- serving ------------------------------------------------------------
+
+    def decode_init(self, params, batch: dict, max_len: int,
+                    dtype=jnp.bfloat16):
+        if self.cfg.family == "encdec":
+            return encdec.encdec_decode_init(params, self.cfg,
+                                             batch["frames"], max_len, dtype)
+        bsz = batch["tokens"].shape[0]
+        return transformer.lm_decode_init(self.cfg, bsz, max_len, dtype)
+
+    def decode_step(self, params, cache, tokens):
+        if self.cfg.family == "encdec":
+            return encdec.encdec_decode_step(params, self.cfg, cache, tokens)
+        return transformer.lm_decode_step(params, self.cfg, cache, tokens)
+
+    # -- shape builders (ShapeDtypeStruct stand-ins; no allocation) ----------
+
+    def batch_specs(self, shape: ShapeSpec, *, batch_override: int | None = None):
+        """Training/prefill batch ShapeDtypeStructs for ``jit.lower``."""
+        cfg = self.cfg
+        b = batch_override or shape.global_batch
+        specs = {"tokens": jax.ShapeDtypeStruct((b, shape.seq_len + 1),
+                                                jnp.int32)}
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)
+        return specs
+
+    def decode_specs(self, shape: ShapeSpec, *, batch_override: int | None = None):
+        """(cache_specs, token_spec) for serve_step lowering."""
+        cfg = self.cfg
+        b = batch_override or shape.global_batch
+        max_len = shape.seq_len
+        if cfg.family == "encdec":
+            # cache depends on params: derive via eval_shape over decode_init
+            params_spec = jax.eval_shape(
+                lambda r: encdec.encdec_init(cfg, r), jax.random.key(0))
+            frames_spec = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+            cache = jax.eval_shape(
+                lambda p, f: encdec.encdec_decode_init(p, cfg, f, max_len),
+                params_spec, frames_spec)
+        else:
+            cache = jax.eval_shape(
+                lambda: transformer.lm_decode_init(cfg, b, max_len))
+        return cache, jax.ShapeDtypeStruct((b,), jnp.int32)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,102 @@
+"""Mixture-of-Experts with sort-based capacity dispatch.
+
+Designed for large expert counts (kimi-k2: 384 routed experts) where the
+GShard one-hot dispatch einsum (tokens x experts x capacity) is infeasible.
+Tokens are ranked into per-expert slots via a stable sort; over-capacity
+tokens are dropped (their residual path passes through untouched, plus any
+shared experts). Expert FFNs run as one batched einsum over the
+(E, capacity, d) buffer, which shards cleanly: E over the ``model`` mesh
+axis (expert parallelism), capacity over ``data``.
+
+Router in f32; auxiliary load-balancing loss returned to the caller.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, dense_init, mlp, mlp_init
+
+
+def moe_init(rng, cfg, dtype=jnp.float32):
+    m = cfg.moe
+    d = cfg.d_model
+    kr, ke, ks = jax.random.split(rng, 3)
+
+    def expert_init(k):
+        return mlp_init(k, d, m.d_expert, kind=cfg.mlp_type, dtype=dtype)
+
+    p = {
+        "router": dense_init(kr, d, m.n_experts, scale=0.02, dtype=dtype),
+        "experts": jax.vmap(expert_init)(jax.random.split(ke, m.n_experts)),
+    }
+    if m.n_shared:
+        p["shared"] = mlp_init(ks, d, m.d_expert * m.n_shared,
+                               kind=cfg.mlp_type, dtype=dtype)
+    return p
+
+
+def _expert_ffn(experts, buf, kind: str):
+    """buf: (E, C, d) -> (E, C, d) through per-expert FFNs."""
+    def matmul(w, x):           # w: (E, a, b), x: (E, C, a)
+        return jnp.einsum("eca,eab->ecb", x, w.astype(x.dtype))
+
+    if kind == "swiglu":
+        h = jax.nn.silu(matmul(experts["wg"]["w"], buf)) * \
+            matmul(experts["wi"]["w"], buf)
+    else:
+        h = jax.nn.gelu(matmul(experts["wi"]["w"], buf))
+    return matmul(experts["wo"]["w"], h)
+
+
+def moe_apply(params, cfg, x):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    tokens = x.reshape(t, d)
+
+    logits = dense(params["router"], tokens.astype(jnp.float32))   # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, ids = jax.lax.top_k(probs, m.top_k)                      # (T, k)
+    gate = gate / jnp.maximum(jnp.sum(gate, axis=-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                                   # (E,)
+    ce = jnp.mean(jax.nn.one_hot(ids[:, 0], m.n_experts), axis=0)
+    aux = m.n_experts * jnp.sum(me * ce)
+
+    tk = t * m.top_k
+    flat_ids = ids.reshape(tk)
+    flat_gate = gate.reshape(tk)
+    token_idx = jnp.arange(tk) // m.top_k
+
+    capacity = max(int(math.ceil(tk * m.capacity_factor / m.n_experts)), 4)
+
+    # slot of each (token, expert) pair within its expert, via stable sort
+    order = jnp.argsort(flat_ids, stable=True)
+    sorted_ids = flat_ids[order]
+    pos_in_group = jnp.arange(tk) - jnp.searchsorted(
+        sorted_ids, sorted_ids, side="left")
+    slot = jnp.zeros(tk, jnp.int32).at[order].set(pos_in_group.astype(jnp.int32))
+
+    # scatter into the expert buffer; over-capacity slots are dropped
+    from repro.models import pjit_hints
+    buf = jnp.zeros((m.n_experts, capacity, d), x.dtype)
+    buf = buf.at[flat_ids, slot].set(tokens[token_idx], mode="drop")
+    buf = pjit_hints.shard_experts(buf)
+
+    out_buf = _expert_ffn(params["experts"], buf, cfg.mlp_type)
+    out_buf = pjit_hints.shard_experts(out_buf)
+
+    gathered = out_buf.at[flat_ids, slot].get(
+        mode="fill", fill_value=0.0)                               # (Tk, d)
+    y = jnp.sum((gathered * flat_gate[:, None].astype(gathered.dtype))
+                .reshape(t, m.top_k, d), axis=1)
+
+    if m.n_shared:
+        y = y + mlp(params["shared"], tokens, kind=cfg.mlp_type)
+    return y.reshape(b, s, d), aux

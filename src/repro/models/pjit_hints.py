@@ -1,0 +1,129 @@
+"""Activation-sharding hints for GSPMD.
+
+Pure model code stays mesh-agnostic: the launcher installs the logical->mesh
+mapping here (a module-level context), and the model inserts
+``with_sharding_constraint`` hints at the propagation-critical points
+(residual stream, attention heads, logits). Without these, GSPMD happily
+picks contraction-dim partitionings that replicate the batch and all-reduce
+full activations (observed: f32[256,4096,*] all-reduces, ~6 GB/layer).
+
+When no hints are installed (CPU unit tests, single-device), every helper is
+the identity.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingHints:
+    batch_axes: tuple            # mesh axes carrying the global batch
+    model_axis: str | None       # tensor-parallel axis name
+    model_size: int              # size of the model axis
+
+
+_HINTS: ShardingHints | None = None
+
+
+def install(hints: ShardingHints | None):
+    global _HINTS
+    _HINTS = hints
+
+
+@contextlib.contextmanager
+def hints_ctx(hints: ShardingHints | None):
+    global _HINTS
+    prev = _HINTS
+    _HINTS = hints
+    try:
+        yield
+    finally:
+        _HINTS = prev
+
+
+def current() -> ShardingHints | None:
+    return _HINTS
+
+
+def _wsc(x, spec):
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x       # no mesh context (plain CPU tests)
+
+
+def shard_batch(x, *, extra_dims: int | None = None):
+    """Constrain dim 0 to the batch axes, rest unsharded.
+
+    x: (B, ...). Used on the residual stream and batch-major intermediates.
+    """
+    h = _HINTS
+    if h is None:
+        return x
+    return _wsc(x, P(h.batch_axes, *([None] * (x.ndim - 1))))
+
+
+def shard_heads(x):
+    """x: (B, S, H, hd) — batch over batch axes, heads over model when the
+    head count divides the model axis; otherwise heads replicated."""
+    h = _HINTS
+    if h is None:
+        return x
+    n_heads = x.shape[2]
+    head_spec = h.model_axis if (
+        h.model_axis and n_heads % h.model_size == 0) else None
+    return _wsc(x, P(h.batch_axes, None, head_spec, None))
+
+
+def shard_scores(s):
+    """s: (B, H, q, k) attention scores — heads over model when divisible."""
+    h = _HINTS
+    if h is None:
+        return s
+    head_spec = h.model_axis if (
+        h.model_axis and s.shape[1] % h.model_size == 0) else None
+    return _wsc(s, P(h.batch_axes, head_spec, None, None))
+
+
+def shard_ffn(x):
+    """x: (B, S, F) — F over model when divisible (MLP hidden)."""
+    h = _HINTS
+    if h is None:
+        return x
+    f_spec = h.model_axis if (
+        h.model_axis and x.shape[-1] % h.model_size == 0) else None
+    return _wsc(x, P(h.batch_axes, None, f_spec))
+
+
+def shard_logits(x):
+    """x: (..., V) — vocab over model when divisible."""
+    h = _HINTS
+    if h is None:
+        return x
+    v_spec = h.model_axis if (
+        h.model_axis and x.shape[-1] % h.model_size == 0) else None
+    return _wsc(x, P(h.batch_axes, *([None] * (x.ndim - 2)), v_spec))
+
+
+def shard_experts(x):
+    """x: (E, C, D) expert buffers — E over model (expert parallelism)."""
+    h = _HINTS
+    if h is None:
+        return x
+    e_spec = h.model_axis if (
+        h.model_axis and x.shape[0] % h.model_size == 0) else None
+    return _wsc(x, P(e_spec, *([None] * (x.ndim - 1))))
+
+
+def from_mesh(mesh, *, inside_pod_vmap: bool = False) -> ShardingHints:
+    batch = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if inside_pod_vmap:
+        batch = tuple(a for a in batch if a != "pod")
+    model_axis = "model" if "model" in mesh.axis_names else None
+    return ShardingHints(batch_axes=batch, model_axis=model_axis,
+                         model_size=mesh.shape.get("model", 1))

@@ -1,0 +1,215 @@
+"""Mamba2 — State Space Duality (SSD) blocks (arXiv:2405.21060).
+
+The sequence dimension is processed in chunks: within a chunk the SSD
+recurrence is evaluated as a masked (decay-weighted) attention-like matmul
+(MXU-friendly); across chunks a compact (H, N, P) state is carried by a
+``lax.scan``. Per-token decode is the plain O(1) recurrence.
+
+Shapes: x (B, S, H, P) after the input projection reshape, B/C (B, S, G, N)
+with H % G == 0, dt (B, S, H), A (H,) negative.
+All SSD math runs in f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, dense_init
+
+
+def ssm_init(rng, cfg, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.state_size
+    k_in, k_conv, k_a, k_out = jax.random.split(rng, 4)
+
+    proj_dim = 2 * d_inner + 2 * s.n_groups * s.state_size + n_heads
+    return {
+        "in_proj": dense_init(k_in, d, proj_dim, dtype=dtype),
+        "conv_w": jax.random.normal(k_conv, (s.conv_kernel, conv_dim), dtype)
+        * (s.conv_kernel * conv_dim) ** -0.5,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(dtype),
+        "d_skip": jnp.ones((n_heads,), dtype),
+        "dt_bias": jnp.zeros((n_heads,), dtype),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(k_out, d_inner, d, dtype=dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    gn = s.n_groups * s.state_size
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * gn], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv1d along seq. xbc: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[i][None, None, :]
+              for i in range(k))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, *, chunk: int,
+                initial_state=None):
+    """Chunked SSD scan (the heart of Mamba2).
+
+    x (B,S,H,P), dt (B,S,H) [post-softplus], a (H,) negative,
+    b_mat/c_mat (B,S,G,N). Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    bsz, seq, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    hg = h // g
+    assert seq % chunk == 0, (seq, chunk)
+    nc = seq // chunk
+
+    f32 = jnp.float32
+    # chunk-major layout for the scan: (NC, B, Q, ...)
+    xc = x.astype(f32).reshape(bsz, nc, chunk, h, p).swapaxes(0, 1)
+    dtc = dt.astype(f32).reshape(bsz, nc, chunk, h).swapaxes(0, 1)
+    bm = b_mat.astype(f32).reshape(bsz, nc, chunk, g, n).swapaxes(0, 1)
+    cm = c_mat.astype(f32).reshape(bsz, nc, chunk, g, n).swapaxes(0, 1)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(state, xs):
+        xq, dtq, bq, cq = xs                                # (B,Q,H,P) ...
+        da = dtq * a[None, None, :]                         # (B,Q,H)
+        seg = jnp.cumsum(da, axis=1)
+
+        # intra-chunk: masked decay attention. Mask BEFORE the exp: masked
+        # (future) entries have rel > 0 and exp(rel) overflows to inf, and
+        # `where(mask, inf, 0)` then poisons the backward with 0 * inf.
+        rel = seg[:, :, None, :] - seg[:, None, :, :]       # (B,Q,T,H)
+        rel = jnp.where(causal[None, :, :, None], rel, -1e30)
+        decay = jnp.exp(rel)
+        scores = jnp.einsum("bqgn,btgn->bqtg", cq, bq)      # (B,Q,T,G)
+        scores = jnp.repeat(scores, hg, axis=-1)            # (B,Q,T,H)
+        att = scores * decay * dtq[:, None, :, :]
+        y_intra = jnp.einsum("bqth,bthp->bqhp", att, xq)
+
+        # inter-chunk: contribution of the entering state
+        ch = jnp.repeat(cq, hg, axis=-2)                    # (B,Q,H,N)
+        y_inter = jnp.einsum("bqh,bqhn,bhnp->bqhp",
+                             jnp.exp(seg), ch, state)
+
+        # state update
+        last = seg[:, -1:, :]
+        w_state = jnp.exp(last - seg) * dtq                 # (B,Q,H)
+        bh = jnp.repeat(bq, hg, axis=-2)                    # (B,Q,H,N)
+        states_c = jnp.einsum("bqh,bqhn,bqhp->bhnp", w_state, bh, xq)
+        chunk_decay = jnp.exp(jnp.sum(da, axis=1))          # (B,H)
+        new_state = state * chunk_decay[..., None, None] + states_c
+        return new_state, y_intra + y_inter
+
+    init = (jnp.zeros((bsz, h, n, p), f32) if initial_state is None
+            else initial_state.astype(f32))
+    final, ys = jax.lax.scan(body, init, (xc, dtc, bm, cm))
+    y = ys.swapaxes(0, 1).reshape(bsz, seq, h, p)
+    return y, final
+
+
+def ssm_apply(params, cfg, x, *, initial_state=None, return_state=False):
+    """Full-sequence Mamba2 block. x: (B, S, d) -> (B, S, d)."""
+    s = cfg.ssm
+    bsz, seq, d = x.shape
+    d_inner = s.expand * d
+    h = d_inner // s.head_dim
+    gn = s.n_groups * s.state_size
+
+    zxbcdt = dense(params["in_proj"], x)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc, params["conv_w"].astype(x.dtype),
+                       params["conv_b"].astype(x.dtype))
+    xs, b_mat, c_mat = jnp.split(xbc, [d_inner, d_inner + gn], axis=-1)
+
+    xs = xs.reshape(bsz, seq, h, s.head_dim)
+    b_mat = b_mat.reshape(bsz, seq, s.n_groups, s.state_size)
+    c_mat = c_mat.reshape(bsz, seq, s.n_groups, s.state_size)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    y, state = ssd_chunked(xs, dt, a, b_mat, c_mat, chunk=min(s.chunk_size, seq),
+                           initial_state=initial_state)
+    y = y + xs.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)[
+        None, None, :, None]
+    y = y.reshape(bsz, seq, d_inner).astype(x.dtype)
+
+    # gated RMSNorm (Mamba2's norm-before-out-proj)
+    yz = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(yz.astype(jnp.float32)), axis=-1, keepdims=True)
+    yz = (yz.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+          * params["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+    out = dense(params["out_proj"], yz)
+    if return_state:
+        return out, state
+    return out
+
+
+# ---------------------------------------------------------------------------
+# O(1) decode
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    h = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.state_size
+    return {
+        "state": jnp.zeros((batch, h, s.state_size, s.head_dim), dtype),
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, conv_dim), dtype),
+    }
+
+
+def ssm_decode(params, cfg, x, cache):
+    """One-token step. x: (B, 1, d). Returns (y, new_cache)."""
+    s = cfg.ssm
+    bsz, _, d = x.shape
+    d_inner = s.expand * d
+    h = d_inner // s.head_dim
+    gn = s.n_groups * s.state_size
+
+    zxbcdt = dense(params["in_proj"], x)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+
+    # rolling conv buffer
+    window = jnp.concatenate([cache["conv"], xbc.astype(cache["conv"].dtype)],
+                             axis=1)                        # (B, K, C)
+    w = params["conv_w"].astype(jnp.float32)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w) \
+        + params["conv_b"].astype(jnp.float32)
+    xbc1 = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)
+    new_conv = window[:, 1:]
+
+    xs, b_mat, c_mat = jnp.split(xbc1, [d_inner, d_inner + gn], axis=-1)
+    xs = xs.reshape(bsz, h, s.head_dim).astype(jnp.float32)
+    b_mat = b_mat.reshape(bsz, s.n_groups, s.state_size).astype(jnp.float32)
+    c_mat = c_mat.reshape(bsz, s.n_groups, s.state_size).astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + params["dt_bias"].astype(jnp.float32))  # (B,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    hg = h // s.n_groups
+    bh = jnp.repeat(b_mat, hg, axis=1)                      # (B,H,N)
+    ch = jnp.repeat(c_mat, hg, axis=1)
+    decay = jnp.exp(dt1 * a[None, :])                       # (B,H)
+    state = cache["state"] * decay[..., None, None] + \
+        jnp.einsum("bh,bhn,bhp->bhnp", dt1, bh, xs)
+    y = jnp.einsum("bhn,bhnp->bhp", ch, state) + \
+        xs * params["d_skip"].astype(jnp.float32)[None, :, None]
+
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    yz = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(yz.astype(jnp.float32)), axis=-1, keepdims=True)
+    yz = (yz.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+          * params["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+    out = dense(params["out_proj"], yz)
+    return out, {"state": state, "conv": new_conv}

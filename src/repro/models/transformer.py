@@ -1,0 +1,379 @@
+"""Decoder-only LM assembly for all causal families.
+
+Layer parameters are stacked along a leading axis and consumed by
+``lax.scan`` so 64-layer configs lower to compact HLO. Heterogeneous parts
+(leading dense layers of MoE models, zamba2's weight-tied shared attention
+block) sit outside the homogeneous stack.
+
+Families handled here: dense (olmo/qwen2/qwen3), moe (kimi-k2),
+moe+mla (deepseek-v2-lite), ssm (mamba2), hybrid (zamba2), vlm backbone
+(internvl2 — vision embeddings prepended). The encoder-decoder family
+(whisper) lives in :mod:`repro.models.encdec`.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (attention, attention_decode,
+                                    attention_init, init_kv_cache,
+                                    init_mla_cache, mla_attention, mla_decode,
+                                    mla_init)
+from repro.models.layers import (apply_norm, cross_entropy, embed,
+                                 embedding_init, mlp, mlp_init, norm_init,
+                                 unembed, dense_init, dense)
+from repro.models.moe import moe_apply, moe_init
+from repro.models.ssm import init_ssm_cache, ssm_apply, ssm_decode, ssm_init
+
+
+def _norm_params(cfg):
+    return norm_init(cfg.d_model, kind=cfg.norm_type,
+                     parametric=not cfg.nonparametric_norm)
+
+
+def _apply_norm(cfg, p, x):
+    return apply_norm(p, x, kind=cfg.norm_type)
+
+
+# ---------------------------------------------------------------------------
+# Homogeneous block (the scanned stack)
+# ---------------------------------------------------------------------------
+
+def block_init(rng, cfg):
+    """One layer of the homogeneous stack, structure fixed by cfg.family."""
+    k1, k2, k3 = jax.random.split(rng, 3)
+    p = {}
+    if cfg.family in ("ssm", "hybrid"):
+        p["norm1"] = _norm_params(cfg)
+        p["ssm"] = ssm_init(k1, cfg)
+        return p
+    p["norm1"] = _norm_params(cfg)
+    p["norm2"] = _norm_params(cfg)
+    if cfg.mla is not None:
+        p["attn"] = mla_init(k1, cfg)
+    else:
+        p["attn"] = attention_init(k1, cfg)
+    if cfg.moe is not None:
+        p["ffn"] = moe_init(k2, cfg)
+    else:
+        p["ffn"] = mlp_init(k2, cfg.d_model, cfg.d_ff, kind=cfg.mlp_type)
+    return p
+
+
+def block_apply(params, cfg, x, aux):
+    from repro.models import pjit_hints
+    x = pjit_hints.shard_batch(x)
+    if cfg.family in ("ssm", "hybrid"):
+        return x + ssm_apply(params["ssm"], cfg,
+                             _apply_norm(cfg, params["norm1"], x)), aux
+    h = _apply_norm(cfg, params["norm1"], x)
+    if cfg.mla is not None:
+        h = mla_attention(params["attn"], cfg, h)
+    else:
+        h = attention(params["attn"], cfg, h, causal=True, rope=cfg.use_rope)
+    x = x + h
+    h = _apply_norm(cfg, params["norm2"], x)
+    if cfg.moe is not None:
+        h, a = moe_apply(params["ffn"], cfg, h)
+        aux = aux + a
+    else:
+        h = mlp(params["ffn"], h, kind=cfg.mlp_type)
+    return x + h, aux
+
+
+def dense_block_init(rng, cfg):
+    """Leading dense layer of a MoE model (kimi/deepseek layer 0)."""
+    k1, k2 = jax.random.split(rng)
+    p = {"norm1": _norm_params(cfg), "norm2": _norm_params(cfg)}
+    p["attn"] = mla_init(k1, cfg) if cfg.mla is not None else \
+        attention_init(k1, cfg)
+    d_ff = cfg.d_ff if cfg.d_ff else 4 * cfg.d_model
+    p["ffn"] = mlp_init(k2, cfg.d_model, d_ff, kind=cfg.mlp_type)
+    return p
+
+
+def dense_block_apply(params, cfg, x):
+    h = _apply_norm(cfg, params["norm1"], x)
+    if cfg.mla is not None:
+        h = mla_attention(params["attn"], cfg, h)
+    else:
+        h = attention(params["attn"], cfg, h, causal=True, rope=cfg.use_rope)
+    x = x + h
+    h = _apply_norm(cfg, params["norm2"], x)
+    return x + mlp(params["ffn"], h, kind=cfg.mlp_type)
+
+
+def shared_attn_init(rng, cfg):
+    """Zamba2's weight-tied attention(+MLP) block."""
+    k1, k2 = jax.random.split(rng)
+    return {"norm1": _norm_params(cfg), "norm2": _norm_params(cfg),
+            "attn": attention_init(k1, cfg),
+            "ffn": mlp_init(k2, cfg.d_model, cfg.d_ff, kind=cfg.mlp_type)}
+
+
+def shared_attn_apply(params, cfg, x):
+    x = x + attention(params["attn"], cfg,
+                      _apply_norm(cfg, params["norm1"], x),
+                      causal=True, rope=cfg.use_rope)
+    return x + mlp(params["ffn"], _apply_norm(cfg, params["norm2"], x),
+                   kind=cfg.mlp_type)
+
+
+# ---------------------------------------------------------------------------
+# LM init / forward
+# ---------------------------------------------------------------------------
+
+def _n_stack_layers(cfg) -> int:
+    n_dense = cfg.moe.n_dense_layers if cfg.moe is not None else 0
+    return cfg.n_layers - n_dense
+
+
+def lm_init(cfg, rng):
+    k_embed, k_blocks, k_dense, k_shared, k_out = jax.random.split(rng, 5)
+    n_stack = _n_stack_layers(cfg)
+    params = {
+        "embed": embedding_init(k_embed, cfg.vocab_size, cfg.d_model),
+        "blocks": jax.vmap(lambda k: block_init(k, cfg))(
+            jax.random.split(k_blocks, n_stack)),
+        "final_norm": _norm_params(cfg),
+    }
+    if cfg.moe is not None and cfg.moe.n_dense_layers:
+        params["dense_blocks"] = [
+            dense_block_init(k, cfg)
+            for k in jax.random.split(k_dense, cfg.moe.n_dense_layers)]
+    if cfg.family == "hybrid" and cfg.hybrid_attn_period:
+        params["shared_attn"] = shared_attn_init(k_shared, cfg)
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(k_out, cfg.d_model, cfg.vocab_size,
+                                       scale=cfg.d_model ** -0.5)
+    return params
+
+
+def _maybe_remat(cfg, fn):
+    return jax.checkpoint(fn) if cfg.remat != "none" else fn
+
+
+def _layer_slice(params, i):
+    return jax.tree.map(lambda p: p[i], params)
+
+
+def _run_stack(params, cfg, x):
+    """Run the homogeneous stack: lax.scan normally, an unrolled Python loop
+    when cfg.scan_layers=False (dry-run cost analysis — XLA's cost model
+    counts while-loop bodies exactly once). Returns (x, aux)."""
+    aux0 = jnp.zeros((), jnp.float32)
+    n_stack = _n_stack_layers(cfg)
+
+    if cfg.family == "hybrid" and cfg.hybrid_attn_period:
+        period = cfg.hybrid_attn_period
+        assert n_stack % period == 0
+        n_groups = n_stack // period
+        grouped = jax.tree.map(
+            lambda p: p.reshape(n_groups, period, *p.shape[1:]),
+            params["blocks"])
+        shared = params["shared_attn"]
+
+        def group_body(carry, group_params):
+            h, aux = carry
+
+            def layer_body(c, lp):
+                hh, a = block_apply(lp, cfg, c[0], c[1])
+                return (hh, a), None
+
+            if cfg.scan_layers:
+                (h, aux), _ = jax.lax.scan(
+                    _maybe_remat(cfg, layer_body), (h, aux), group_params)
+            else:
+                body = _maybe_remat(cfg, lambda c, lp: layer_body(c, lp)[0])
+                for i in range(period):
+                    h, aux = body((h, aux), _layer_slice(group_params, i))
+            h = shared_attn_apply(shared, cfg, h)
+            return (h, aux), None
+
+        if cfg.scan_layers:
+            (x, aux), _ = jax.lax.scan(group_body, (x, aux0), grouped)
+        else:
+            aux = aux0
+            for g in range(n_groups):
+                (x, aux), _ = group_body((x, aux), _layer_slice(grouped, g))
+        return x, aux
+
+    def layer_body(carry, layer_params):
+        h, aux = carry
+        h, aux = block_apply(layer_params, cfg, h, aux)
+        return (h, aux), None
+
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(_maybe_remat(cfg, layer_body), (x, aux0),
+                                   params["blocks"])
+    else:
+        body = _maybe_remat(cfg, lambda c, lp: layer_body(c, lp)[0])
+        x, aux = x, aux0
+        for i in range(n_stack):
+            x, aux = body((x, aux), _layer_slice(params["blocks"], i))
+    return x, aux
+
+
+def lm_forward(params, cfg, tokens, *, prefix_embeds=None):
+    """tokens: (B, S) int32. prefix_embeds: (B, P, d) prepended (VLM stub).
+
+    Returns (logits (B, S[+P], V), aux_loss scalar).
+    """
+    from repro.models import pjit_hints
+    x = embed(params["embed"], tokens).astype(
+        jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = pjit_hints.shard_batch(x)
+    if cfg.moe is not None and cfg.moe.n_dense_layers:
+        for dp in params["dense_blocks"]:
+            x = dense_block_apply(dp, cfg, x)
+    x, aux = _run_stack(params, cfg, x)
+    x = _apply_norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = dense(params["unembed"], x)
+    return pjit_hints.shard_logits(logits), aux
+
+
+def lm_loss(params, cfg, batch):
+    """batch: {tokens (B, S+1)[, prefix_embeds, loss_mask]} -> scalar loss."""
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    logits, aux = lm_forward(params, cfg, inputs,
+                             prefix_embeds=batch.get("prefix_embeds"))
+    if batch.get("prefix_embeds") is not None:
+        logits = logits[:, batch["prefix_embeds"].shape[1]:]
+    loss = cross_entropy(logits, labels, batch.get("loss_mask"))
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def _layer_cache_init(cfg, batch, max_len, dtype):
+    if cfg.family in ("ssm", "hybrid"):
+        return init_ssm_cache(cfg, batch, jnp.float32)
+    if cfg.mla is not None:
+        return init_mla_cache(cfg, batch, max_len, dtype)
+    return init_kv_cache(cfg, batch, max_len, dtype)
+
+
+def lm_decode_init(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Build the full decode cache pytree (stacked over stack layers)."""
+    n_stack = _n_stack_layers(cfg)
+    stack = jax.vmap(lambda _: _layer_cache_init(cfg, batch, max_len, dtype)
+                     )(jnp.arange(n_stack))
+    cache = {"stack": stack, "position": jnp.zeros((batch,), jnp.int32)}
+    if cfg.moe is not None and cfg.moe.n_dense_layers:
+        cache["dense"] = [_layer_cache_init(cfg, batch, max_len, dtype)
+                          for _ in range(cfg.moe.n_dense_layers)]
+    if cfg.family == "hybrid" and cfg.hybrid_attn_period:
+        n_apps = _n_stack_layers(cfg) // cfg.hybrid_attn_period
+        cache["shared"] = jax.vmap(
+            lambda _: init_kv_cache(cfg, batch, max_len, dtype)
+        )(jnp.arange(n_apps))
+    return cache
+
+
+def _block_decode(params, cfg, x, layer_cache, position, *, moe_ffn=None):
+    if moe_ffn is None:
+        moe_ffn = cfg.moe is not None
+    if cfg.family in ("ssm", "hybrid"):
+        h, new = ssm_decode(params["ssm"], cfg,
+                            _apply_norm(cfg, params["norm1"], x), layer_cache)
+        return x + h, new
+    h = _apply_norm(cfg, params["norm1"], x)
+    if cfg.mla is not None:
+        h, new = mla_decode(params["attn"], cfg, h, layer_cache)
+    else:
+        h, new = attention_decode(params["attn"], cfg, h, layer_cache,
+                                  rope=cfg.use_rope)
+    x = x + h
+    h = _apply_norm(cfg, params["norm2"], x)
+    if moe_ffn:
+        h, _ = moe_apply(params["ffn"], cfg, h)
+    else:
+        h = mlp(params["ffn"], h, kind=cfg.mlp_type)
+    return x + h, new
+
+
+def lm_decode_step(params, cfg, cache, tokens):
+    """One decode step. tokens: (B,) int32 -> (logits (B, V), new cache)."""
+    x = embed(params["embed"], tokens[:, None]).astype(
+        jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    position = cache["position"]
+    new_cache = {"position": position + 1}
+
+    if cfg.moe is not None and cfg.moe.n_dense_layers:
+        new_dense = []
+        for dp, dc in zip(params["dense_blocks"], cache["dense"]):
+            x, nc = _block_decode(dp, cfg, x, dc, position, moe_ffn=False)
+            new_dense.append(nc)
+        new_cache["dense"] = new_dense
+
+    if cfg.family == "hybrid" and cfg.hybrid_attn_period:
+        period = cfg.hybrid_attn_period
+        n_stack = _n_stack_layers(cfg)
+        n_groups = n_stack // period
+        grouped = jax.tree.map(
+            lambda p: p.reshape(n_groups, period, *p.shape[1:]),
+            params["blocks"])
+        gcache = jax.tree.map(
+            lambda c: c.reshape(n_groups, period, *c.shape[1:]),
+            cache["stack"])
+        shared = params["shared_attn"]
+
+        def group_body(x, xs):
+            gp, gc, sc = xs
+
+            def layer_body(h, ls):
+                lp, lc = ls
+                h, nc = _block_decode(lp, cfg, h, lc, position)
+                return h, nc
+
+            x, new_gc = jax.lax.scan(layer_body, x, (gp, gc))
+            h = _apply_norm(cfg, shared["norm1"], x)
+            h, new_sc = attention_decode(shared["attn"], cfg, h, sc,
+                                         rope=cfg.use_rope)
+            x = x + h
+            x = x + mlp(shared["ffn"],
+                        _apply_norm(cfg, shared["norm2"], x),
+                        kind=cfg.mlp_type)
+            return x, (new_gc, new_sc)
+
+        x, (new_stack, new_shared) = jax.lax.scan(
+            group_body, x, (grouped, gcache, cache["shared"]))
+        new_cache["stack"] = jax.tree.map(
+            lambda c: c.reshape(n_stack, *c.shape[2:]), new_stack)
+        new_cache["shared"] = new_shared
+    else:
+        def layer_body(x, xs):
+            lp, lc = xs
+            x, nc = _block_decode(lp, cfg, x, lc, position)
+            return x, nc
+
+        if cfg.scan_layers:
+            x, new_stack = jax.lax.scan(layer_body, x,
+                                        (params["blocks"], cache["stack"]))
+        else:
+            n_stack = _n_stack_layers(cfg)
+            new_layers = []
+            for i in range(n_stack):
+                x, nc = layer_body(x, (_layer_slice(params["blocks"], i),
+                                       _layer_slice(cache["stack"], i)))
+                new_layers.append(nc)
+            new_stack = jax.tree.map(lambda *ls: jnp.stack(ls), *new_layers)
+        new_cache["stack"] = new_stack
+
+    x = _apply_norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = dense(params["unembed"], x)
+    return logits[:, 0], new_cache

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (Optimizer, adamw, apply_updates,
+                                    clip_by_global_norm, sgd)
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine
+
+__all__ = ["Optimizer", "adamw", "apply_updates", "clip_by_global_norm",
+           "sgd", "constant", "cosine_decay", "linear_warmup_cosine"]

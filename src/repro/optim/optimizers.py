@@ -1,0 +1,85 @@
+"""Optimizers from scratch (no optax): SGD(+momentum), AdamW, global-norm
+clipping. The interface mirrors the (init, update) transformation style so
+optimizers compose with the FL runtime and the pjit train step."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree_global_norm
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable      # (grads, state, params, step) -> (updates, state)
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else lr
+
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params, step):
+        lr_t = _lr_at(lr, step)
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr_t * g, grads), ()
+        new_m = jax.tree.map(lambda m, g: momentum * m + g, state, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: -lr_t * (momentum * m + g),
+                               new_m, grads)
+        else:
+            upd = jax.tree.map(lambda m: -lr_t * m, new_m)
+        return upd, new_m
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        lr_t = _lr_at(lr, step)
+        t = step + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) *
+                         g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) *
+                         jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(m_, v_, p):
+            step_ = m_ / bc1 / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * step_).astype(p.dtype)
+
+        return jax.tree.map(upd, m, v, params), {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(opt: Optimizer, max_norm: float) -> Optimizer:
+    def update(grads, state, params, step):
+        norm = tree_global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+        clipped = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        return opt.update(clipped, state, params, step)
+
+    return Optimizer(opt.init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

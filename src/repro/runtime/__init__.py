@@ -1,0 +1,6 @@
+from repro.runtime.fault_tolerance import (ElasticReassociator,
+                                           FailureInjector, StragglerPolicy,
+                                           retry_with_backoff)
+
+__all__ = ["ElasticReassociator", "FailureInjector", "StragglerPolicy",
+           "retry_with_backoff"]

@@ -1,0 +1,21 @@
+from repro.utils.trees import (
+    tree_add,
+    tree_scale,
+    tree_sub,
+    tree_weighted_mean,
+    tree_zeros_like,
+    tree_global_norm,
+    tree_size,
+    tree_cast,
+)
+
+__all__ = [
+    "tree_add",
+    "tree_scale",
+    "tree_sub",
+    "tree_weighted_mean",
+    "tree_zeros_like",
+    "tree_global_norm",
+    "tree_size",
+    "tree_cast",
+]

@@ -1,0 +1,52 @@
+"""PyTree arithmetic helpers used across the FL runtime and optimizers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_weighted_mean(trees, weights):
+    """Weighted mean of a list of pytrees: eq. (8)/(14) of the paper.
+
+    ``weights`` is a 1-D array aligned with ``trees``; normalization is
+    performed here so callers pass raw |D_n| sample counts.
+    """
+    w = jnp.asarray(weights, dtype=jnp.float32)
+    w = w / jnp.sum(w)
+
+    def combine(*leaves):
+        stacked = jnp.stack(leaves)
+        return jnp.tensordot(w.astype(stacked.dtype), stacked, axes=1)
+
+    return jax.tree.map(combine, *trees)
+
+
+def tree_global_norm(a):
+    leaves = jax.tree.leaves(a)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def tree_size(a):
+    """Total number of scalar parameters in the pytree."""
+    return sum(int(x.size) for x in jax.tree.leaves(a))

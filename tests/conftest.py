@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests and benches run single-device (the 512-device override lives
+# ONLY in repro.launch.dryrun, which runs as its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,84 @@
+"""Cost model eqs. (3)-(17) and the Section-III constants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_scenario
+from repro.core.cost_model import (LearningParams, comm_energy, comm_time,
+                                   comp_energy, comp_time, global_cost,
+                                   ra_constants, ra_objective)
+
+
+def test_learning_params_iteration_counts():
+    lp = LearningParams(theta=0.5, epsilon=0.1, mu=14.4, delta=2.17)
+    assert abs(lp.local_iters - 14.4 * np.log(2.0)) < 1e-9
+    assert abs(lp.edge_iters - 2.17 * np.log(10.0) / 0.5) < 1e-9
+
+
+def test_primitive_overheads_match_equations():
+    sc = make_scenario(4, 2, seed=0)
+    dev, lp = sc.dev, sc.lp
+    f = jnp.full(4, 2e9)
+    beta = jnp.full(4, 0.25)
+    bw, n0 = sc.srv.bandwidth[0], sc.srv.noise[0]
+    # eq. (3): t = L * c|D| / f
+    expect = lp.local_iters * np.asarray(dev.cycles_per_iter) / 2e9
+    assert np.allclose(comp_time(dev, f, lp), expect, rtol=1e-6)
+    # eq. (4): e = L * alpha/2 * f^2 * c|D|
+    expect = lp.local_iters * 0.5 * np.asarray(dev.alpha) * (2e9 ** 2) \
+        * np.asarray(dev.cycles_per_iter)
+    assert np.allclose(comp_energy(dev, f, lp), expect, rtol=1e-6)
+    # eq. (6)/(7): t = d/r, e = p*t
+    rate = 0.25 * float(bw) * np.log1p(
+        np.asarray(dev.channel_gain) * np.asarray(dev.tx_power) / float(n0))
+    assert np.allclose(comm_time(dev, beta, bw, n0),
+                       np.asarray(dev.model_nats) / rate, rtol=1e-5)
+    assert np.allclose(comm_energy(dev, beta, bw, n0),
+                       np.asarray(dev.model_nats) / rate
+                       * np.asarray(dev.tx_power), rtol=1e-5)
+
+
+def test_ra_objective_equals_global_cost_single_server():
+    """Problem (18)'s objective must equal the λ-weighted edge cost."""
+    sc = make_scenario(6, 1, seed=1)
+    lp = sc.lp
+    c = ra_constants(sc.dev, sc.srv.bandwidth[0], sc.srv.noise[0], lp)
+    mask = jnp.ones(6, bool)
+    f = jnp.full(6, 3e9)
+    beta = jnp.full(6, 1.0 / 6)
+    obj = float(ra_objective(c, mask, f, beta))
+
+    from repro.core.cost_model import edge_cost
+    direct = float(edge_cost(sc.dev, mask, f, beta, sc.srv.bandwidth[0],
+                             sc.srv.noise[0], lp))
+    assert abs(obj - direct) / direct < 1e-5
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_global_cost_positive_and_finite(seed):
+    sc = make_scenario(8, 3, seed=seed)
+    assignment = jnp.asarray(np.random.default_rng(seed).integers(0, 3, 8))
+    f = jnp.full(8, 2e9)
+    beta = jnp.full(8, 0.2)
+    e, t, cost = global_cost(sc.dev, sc.srv, assignment, f, beta, sc.lp)
+    assert np.isfinite(float(e)) and float(e) > 0
+    assert np.isfinite(float(t)) and float(t) > 0
+    assert abs(float(cost) - (sc.lp.lambda_e * float(e)
+                              + sc.lp.lambda_t * float(t))) < 1e-3 * float(cost)
+
+
+def test_scenario_table2_ranges():
+    sc = make_scenario(32, 5, seed=0)
+    d = sc.dev
+    assert np.all(np.asarray(d.f_min) == 1e9)
+    assert np.all(np.asarray(d.f_max) == 10e9)
+    assert np.all(np.asarray(d.tx_power) == np.float32(0.2))
+    assert np.all(np.asarray(d.alpha) == np.float32(2e-28))
+    assert np.all(np.asarray(d.model_nats) == 25000.0)
+    assert np.all(np.asarray(sc.srv.bandwidth) == np.float32(10e6))
+    # processing density 30-100 cycle/bit on 5-10 MB
+    cpb = np.asarray(d.cycles_per_iter)
+    assert np.all(cpb >= 30 * 5e6 * 8) and np.all(cpb <= 100 * 10e6 * 8)
+    assert sc.avail.any(axis=0).all(), "every device reaches some server"

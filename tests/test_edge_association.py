@@ -1,0 +1,66 @@
+"""Section IV: edge association — monotone improvement, stability,
+permission rules, warm-started elasticity."""
+
+import numpy as np
+import pytest
+
+from repro.core import make_scenario
+from repro.core.edge_association import AssociationEngine, evaluate_scheme
+
+
+def test_monotone_cost_trace_and_stability():
+    sc = make_scenario(18, 4, seed=0)
+    eng = AssociationEngine(sc, kind="fast", seed=0)
+    res = eng.run_batched("random")
+    trace = np.asarray(res.cost_trace)
+    assert np.all(np.diff(trace) <= 1e-6 * trace[:-1]), "cost must decrease"
+    # stability: re-running from the stable point applies no adjustment
+    eng2 = AssociationEngine(sc, kind="fast", seed=0)
+    res2 = eng2.run_batched(assignment=res.assignment)
+    assert res2.n_adjustments == 0
+
+
+def test_faithful_algorithm3_converges():
+    sc = make_scenario(14, 4, seed=1)
+    eng = AssociationEngine(sc, kind="fast", seed=0)
+    res = eng.run("random", max_rounds=50)
+    assert res.n_rounds < 50, "Algorithm 3 must terminate (Thm. 3)"
+    assert res.total_cost <= res.cost_trace[0] + 1e-6
+
+
+def test_assignment_respects_availability():
+    sc = make_scenario(16, 4, seed=2, reach_m=250.0)
+    eng = AssociationEngine(sc, kind="fast", seed=0)
+    res = eng.run_batched("nearest")
+    avail = np.asarray(sc.avail)
+    for dev, srv in enumerate(res.assignment):
+        assert avail[srv, dev], f"device {dev} assigned to unreachable {srv}"
+
+
+def test_pareto_permission_stricter_than_utilitarian():
+    sc = make_scenario(16, 4, seed=3)
+    ut = AssociationEngine(sc, kind="fast", permission="utilitarian",
+                           seed=0).run_batched("random")
+    pa = AssociationEngine(sc, kind="fast", permission="pareto",
+                           seed=0).run_batched("random")
+    # the strict pareto reading permits at most as many adjustments
+    assert pa.n_adjustments <= ut.n_adjustments
+
+
+def test_hfel_beats_nonassociated_schemes():
+    sc = make_scenario(20, 5, seed=4)
+    hfel = evaluate_scheme(sc, "hfel", seed=0)
+    rnd = evaluate_scheme(sc, "random", seed=0)
+    uni = evaluate_scheme(sc, "uniform", seed=0)
+    assert hfel.total_cost <= rnd.total_cost * 1.001
+    assert hfel.total_cost <= uni.total_cost * 1.001
+
+
+def test_scheme_zoo_runs():
+    sc = make_scenario(12, 3, seed=5)
+    for scheme in ["hfel", "random", "greedy", "comp_opt", "comm_opt",
+                   "uniform", "proportional"]:
+        r = evaluate_scheme(sc, scheme, seed=0)
+        assert np.isfinite(r.total_cost) and r.total_cost > 0
+        # every device assigned somewhere (constraint 17e)
+        assert len(r.assignment) == 12

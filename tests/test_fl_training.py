@@ -1,0 +1,61 @@
+"""FL runtime: Algorithm 1 semantics, HFEL vs FedAvg, masking."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import make_mnist_like
+from repro.fl import FederatedTrainer, train_federated
+
+
+def test_hfel_equals_fedavg_when_one_edge_iter_one_server():
+    """With K=1, I=1, HFEL degenerates to FedAvg exactly."""
+    ds = make_mnist_like(8, samples_total=800, seed=0)
+    assign = np.zeros(8, dtype=np.int64)
+    h1 = train_federated(ds, method="hfel", assignment=assign, n_servers=1,
+                         rounds=3, local_iters=5, edge_iters=1, lr=0.05)
+    h2 = train_federated(ds, method="fedavg", rounds=3, local_iters=5,
+                         edge_iters=1, lr=0.05)
+    np.testing.assert_allclose(h1.train_loss, h2.train_loss, rtol=1e-5)
+
+
+def test_training_improves_and_hfel_leads_under_noniid():
+    ds = make_mnist_like(20, seed=1)
+    h_hfel = train_federated(ds, method="hfel", n_servers=4, rounds=12,
+                             local_iters=10, edge_iters=5, lr=0.05,
+                             eval_every=2)
+    h_fa = train_federated(ds, method="fedavg", rounds=12, local_iters=10,
+                           edge_iters=5, lr=0.05, eval_every=2)
+    assert h_hfel.test_acc[-1] > h_hfel.test_acc[0] + 0.1
+    # paper Figs. 7-12: HFEL converges at least as fast (mid-training)
+    mid = len(h_hfel.test_acc) // 2
+    assert h_hfel.test_acc[mid] >= h_fa.test_acc[mid] - 0.01
+
+
+def test_aggregation_weights_match_eq8():
+    import jax
+    ds = make_mnist_like(4, samples_total=400, seed=2)
+    tr = FederatedTrainer(ds, lr=0.05)
+    params = tr.client_params
+    w = jnp.asarray(ds.client_sizes)
+    # shift client c's params by +c; the weighted mean shift must follow
+    # eq. (8): sum(w_c * c) / sum(w)
+    tr.client_params = jax.tree.map(
+        lambda p: p + jnp.arange(4, dtype=p.dtype).reshape(
+            (4,) + (1,) * (p.ndim - 1)), params)
+    tr.edge_aggregate(jnp.zeros(4, jnp.int32), 1)
+    expect_shift = float((w * jnp.arange(4)).sum() / w.sum())
+    got = jax.tree.leaves(tr.client_params)[0]
+    base = jax.tree.leaves(params)[0]
+    np.testing.assert_allclose(np.asarray(got[0] - base[0]).ravel()[0],
+                               expect_shift, rtol=1e-5)
+
+
+def test_client_mask_excludes_stragglers_from_aggregation():
+    import jax
+    ds = make_mnist_like(4, samples_total=400, seed=3)
+    tr = FederatedTrainer(ds, lr=0.05)
+    tr.client_params = jax.tree.map(
+        lambda p: p.at[3].set(1e6), tr.client_params)
+    tr.client_mask = jnp.asarray([True, True, True, False])
+    tr.cloud_aggregate()
+    assert float(jnp.max(jnp.abs(jax.tree.leaves(tr.client_params)[0]))) < 1e3

@@ -1,0 +1,130 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_fwd
+
+KEY = jax.random.key(42)
+
+
+@pytest.mark.parametrize("shape,causal,blocks", [
+    ((1, 128, 4, 32), True, (32, 32)),
+    ((2, 256, 8, 64), True, (64, 128)),
+    ((2, 128, 4, 64), False, (64, 64)),
+    ((1, 512, 2, 16), True, (128, 64)),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(shape, causal, blocks, dtype):
+    b, s, h, d = shape
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], shape, dtype)
+    k = jax.random.normal(ks[1], shape, dtype)
+    v = jax.random.normal(ks[2], shape, dtype)
+    out = flash_attention_fwd(q, k, v, causal=causal, block_q=blocks[0],
+                              block_kv=blocks[1], interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 5e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_gqa():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 128, 8, 32))
+    k = jax.random.normal(ks[1], (2, 128, 2, 32))
+    v = jax.random.normal(ks[2], (2, 128, 2, 32))
+    out = flash_attention_fwd(q, k, v, causal=True, block_q=64, block_kv=64,
+                              interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+
+def test_flash_attention_vjp_matches_ref():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 32))
+    k = jax.random.normal(ks[1], (1, 64, 2, 32))
+    v = jax.random.normal(ks[2], (1, 64, 2, 32))
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(ops.flash_attention(q, k, v, True, 32, 32) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.flash_attention_ref(q, k, v, causal=True) ** 2)
+
+    g1 = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+@pytest.mark.parametrize("causal,sched", [(True, "triangle"),
+                                          (True, "full"), (False, "full")])
+def test_blocked_attention_flash_vjp_matches_autodiff(causal, sched):
+    from repro.models.attention import blocked_attention
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 32))
+    k = jax.random.normal(ks[1], (2, 128, 2, 32))
+    v = jax.random.normal(ks[2], (2, 128, 2, 32))
+
+    def loss(mode):
+        def f(q, k, v):
+            return jnp.sum(blocked_attention(
+                q, k, v, causal=causal, schedule=sched, block_q=32,
+                block_kv=32, vjp_mode=mode) ** 2)
+        return f
+
+    v1, g1 = jax.value_and_grad(loss("autodiff"), argnums=(0, 1, 2))(q, k, v)
+    v2, g2 = jax.value_and_grad(loss("flash"), argnums=(0, 1, 2))(q, k, v)
+    assert abs(float(v1 - v2)) < 1e-4 * abs(float(v1))
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+
+@pytest.mark.parametrize("rows,d", [(64, 128), (1000, 256), (3, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(rows, d, dtype):
+    x = jax.random.normal(KEY, (rows, d), dtype)
+    scale = jax.random.normal(jax.random.key(1), (d,), dtype) * 0.1 + 1.0
+    out = ops.rmsnorm(x, scale, block_rows=32)
+    expect = ref.rmsnorm_ref(x, scale)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("c,p,block", [(4, 100, 64), (32, 4096, 1024),
+                                       (1, 17, 8)])
+def test_hier_aggregate_sweep(c, p, block):
+    u = jax.random.normal(KEY, (c, p))
+    w = jax.random.uniform(jax.random.key(2), (c,)) + 0.05
+    out = ops.hier_aggregate(u, w, block_p=block)
+    expect = ref.hier_aggregate_ref(u, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_hier_aggregate_tree_equals_weighted_mean():
+    trees = [{"w": jnp.full((3, 3), float(i)), "b": jnp.full((2,), float(i))}
+             for i in range(4)]
+    weights = jnp.asarray([1.0, 1.0, 1.0, 5.0])
+    out = ops.hier_aggregate_tree(trees, weights)
+    expect = (0 + 1 + 2 + 5 * 3) / 8.0
+    assert np.allclose(out["w"], expect) and np.allclose(out["b"], expect)
+
+
+@pytest.mark.parametrize("nc,b,h,n,p", [(4, 1, 2, 8, 16), (16, 2, 4, 32, 8)])
+def test_ssd_state_scan_sweep(nc, b, h, n, p):
+    states = jax.random.normal(KEY, (nc, b, h, n, p))
+    decay = jax.random.uniform(jax.random.key(3), (nc, b, h),
+                               minval=0.3, maxval=1.0)
+    init = jax.random.normal(jax.random.key(4), (b, h, n, p))
+    ent, fin = ops.ssd_state_scan(states, decay, init)
+    ent_r, fin_r = ref.ssd_state_scan_ref(states, decay, init)
+    np.testing.assert_allclose(np.asarray(ent), np.asarray(ent_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(fin_r), atol=1e-5)

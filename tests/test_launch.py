@@ -1,0 +1,45 @@
+"""Launcher integration tests (subprocess: each needs its own jax device
+count, set via XLA_FLAGS before init)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, n_devices: int, timeout: int = 600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    return subprocess.run([sys.executable, "-m"] + args, cwd=REPO, env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+@pytest.mark.slow
+def test_train_sync_small_mesh():
+    r = _run(["repro.launch.train", "--arch", "qwen3-0.6b", "--reduced",
+              "--devices", "2x2", "--steps", "4", "--ckpt-every", "1000",
+              "--shape", "train_4k"], n_devices=4)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "step     3" in r.stdout or "step 3" in r.stdout.replace("  ", " ")
+
+
+@pytest.mark.slow
+def test_train_hierarchical_small_mesh():
+    r = _run(["repro.launch.train", "--arch", "olmo-1b", "--reduced",
+              "--devices", "2x2x1", "--mode", "hierarchical",
+              "--edge-period", "2", "--steps", "4", "--ckpt-every", "1000",
+              "--shape", "train_4k"], n_devices=4)
+    assert r.returncode == 0, r.stderr[-2000:]
+
+
+@pytest.mark.slow
+def test_serve_small_mesh():
+    r = _run(["repro.launch.serve", "--arch", "qwen3-0.6b", "--reduced",
+              "--devices", "2x2", "--new-tokens", "4"], n_devices=4)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "tok/s" in r.stdout

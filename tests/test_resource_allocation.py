@@ -1,0 +1,130 @@
+"""Section III solvers: feasibility, KKT structure, optimality cross-checks.
+
+Property tests draw random problem instances (Table II ranges) and assert
+the invariants every solver must satisfy plus mutual consistency between
+the paper-faithful solver, the exact solver and the subgradient oracle.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_scenario
+from repro.core.cost_model import LearningParams, ra_constants, ra_objective
+from repro.core import resource_allocation as ra
+
+
+def _instance(seed: int, n_active: int, n_total: int = 16,
+              lambda_t: float = 0.5):
+    lp = LearningParams(lambda_e=1.0 - lambda_t, lambda_t=lambda_t)
+    sc = make_scenario(n_total, 3, seed=seed, lp=lp)
+    c = ra_constants(sc.dev, sc.srv.bandwidth[0], sc.srv.noise[0], sc.lp)
+    mask = jnp.arange(n_total) < n_active
+    return c, mask
+
+
+def _check_feasible(c, mask, sol):
+    beta = np.asarray(sol.beta)
+    f = np.asarray(sol.f)
+    m = np.asarray(mask)
+    assert np.all(beta[m] > 0), "active betas must be positive"
+    assert np.all(beta[~m] == 0), "padded betas must be zero"
+    assert beta.sum() <= 1.0 + 1e-4, f"sum beta = {beta.sum()}"
+    assert np.all(f[m] >= np.asarray(c.f_min)[m] * (1 - 1e-5))
+    assert np.all(f[m] <= np.asarray(c.f_max)[m] * (1 + 1e-5))
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000), n_active=st.integers(1, 16),
+       lambda_t=st.floats(0.05, 0.95))
+def test_solvers_feasible_and_ordered(seed, n_active, lambda_t):
+    c, mask = _instance(seed, n_active, lambda_t=lambda_t)
+    exact = ra.solve_exact(c, mask)
+    fp = ra.solve_fixed_point(c, mask)
+    paper = ra.solve_paper(c, mask)
+    for sol in (exact, fp, paper):
+        _check_feasible(c, mask, sol)
+        assert np.isfinite(float(sol.cost))
+    # the exact solver must not be beaten by the approximate ones
+    assert float(exact.cost) <= float(fp.cost) * 1.01
+    assert float(exact.cost) <= float(paper.cost) * 1.01
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000), n_active=st.integers(2, 12))
+def test_exact_matches_subgradient_oracle(seed, n_active):
+    c, mask = _instance(seed, n_active)
+    exact = ra.solve_exact(c, mask)
+    oracle = ra.solve_reference(c, mask)
+    # within 2% of the structure-free oracle (subgradient is itself approx)
+    assert float(exact.cost) <= float(oracle.cost) * 1.02
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n_active=st.integers(2, 12))
+def test_perturbation_optimality(seed, n_active):
+    """No random feasible perturbation of the exact solution improves it."""
+    c, mask = _instance(seed, n_active)
+    sol = ra.solve_exact(c, mask)
+    rng = np.random.default_rng(seed)
+    base = float(sol.cost)
+    beta = np.asarray(sol.beta)
+    f = np.asarray(sol.f)
+    m = np.asarray(mask)
+    for _ in range(8):
+        db = rng.normal(0, 0.02, beta.shape) * m
+        nb = np.clip(beta + db, 1e-6, 1.0) * m
+        nb = nb / max(nb.sum(), 1.0)  # keep sum <= 1
+        nf = np.clip(f * (1 + rng.normal(0, 0.05, f.shape)),
+                     np.asarray(c.f_min), np.asarray(c.f_max))
+        safe_beta = jnp.where(mask, jnp.maximum(jnp.asarray(nb), 1e-12), 1.0)
+        cost = float(ra_objective(c, mask, jnp.asarray(nf), safe_beta))
+        assert cost >= base * (1 - 5e-3), (cost, base)
+
+
+def test_beta_rule_eq19_normalization():
+    c, mask = _instance(0, 8)
+    f = jnp.sqrt(c.f_min * c.f_max)
+    beta = ra.beta_of_f(c, mask, f)
+    assert abs(float(beta.sum()) - 1.0) < 1e-5
+    # proportionality: beta ratios match cube-root score ratios
+    tau = 2 * c.b * f**3 / c.e
+    score = jnp.cbrt(c.a + tau * c.d)
+    ratio = np.asarray(beta)[:8] / np.asarray(score)[:8]
+    assert np.allclose(ratio, ratio[0], rtol=1e-4)
+
+
+def test_common_deadline_structure():
+    """KKT: devices with interior f finish at the same time t* (eq. 25)."""
+    c, mask = _instance(3, 10)
+    sol = ra.solve_exact(c, mask)
+    m = np.asarray(mask)
+    f = np.asarray(sol.f)
+    beta = np.maximum(np.asarray(sol.beta), 1e-12)
+    finish = np.asarray(c.d) / beta + np.asarray(c.e) / f
+    interior = m & (f > np.asarray(c.f_min) * 1.001) \
+        & (f < np.asarray(c.f_max) * 0.999)
+    if interior.sum() >= 2:
+        times = finish[interior]
+        assert times.max() / times.min() < 1.05, times
+
+
+def test_partial_optimizers_are_worse_or_equal():
+    """comp-only / comm-only optimization can't beat the joint optimum."""
+    c, mask = _instance(1, 8)
+    joint = float(ra.solve_exact(c, mask).cost)
+    n_active = int(mask.sum())
+    uniform = jnp.where(mask, 1.0 / n_active, 0.0)
+    comp = float(ra.optimize_f_given_beta(c, mask, uniform).cost)
+    f_rand = jnp.asarray(np.random.default_rng(0).uniform(
+        np.asarray(c.f_min), np.asarray(c.f_max)).astype(np.float32))
+    comm = float(ra.optimize_beta_given_f(c, mask, f_rand).cost)
+    assert joint <= comp * 1.01
+    assert joint <= comm * 1.01
+
+
+def test_empty_group_zero_cost():
+    c, mask = _instance(0, 0)
+    for solver in (ra.solve_exact, ra.solve_fixed_point, ra.solve_paper):
+        assert float(solver(c, jnp.zeros(16, bool)).cost) == 0.0
