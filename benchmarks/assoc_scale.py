@@ -1,0 +1,111 @@
+"""Association-engine scaling: device-resident fused-sweep engine
+(repro.core.assoc_fast) vs the host-loop reference (run_batched).
+
+Sections:
+  * head-to-head at the paper's N=60/K=5 operating point — cold (includes
+    jit compile) and warm wall-clock, plus the stable-point parity gap on a
+    deterministic (exchange_samples=0) run;
+  * large cluster-structured scenarios (make_large_scenario) that the host
+    engine cannot reach in benchmark time, run end-to-end on the fast engine
+    with screening profiles.
+
+Timings land in the returned dict under "timings" so
+``scripts/bench_guard.py`` can diff them against the previous run.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import make_scenario
+from repro.core.assoc_fast import FastAssociationEngine
+from repro.core.edge_association import AssociationEngine
+from repro.core.scenario import make_large_scenario
+
+# (n_devices, n_servers, profile, exchange_samples, max_moves)
+# Per-round cost scales ~N^2 (a 2*(N+1)-group fused refresh of N-wide
+# solves), so the stress points bound the number of steepest-descent moves:
+# steepest descent applies the largest deltas first, so a bounded run still
+# captures most of the attainable cost drop (reported as *_cost_drop).
+SCALE_POINTS = [
+    (250, 10, "coarse", 16, 80),
+    (1000, 20, "coarse", 16, 40),
+]
+
+
+def run(report):
+    t_start = time.time()
+    timings: dict[str, float] = {}
+    out: dict = {"timings": timings}
+
+    # -- head to head at the paper's operating point ------------------------
+    sc = make_scenario(60, 5, seed=0)
+    t0 = time.time()
+    ref = AssociationEngine(sc, kind="fast", seed=0).run_batched("random")
+    t_ref = time.time() - t0
+    timings["ref_run_batched_n60_k5"] = t_ref
+    report("assoc_scale/ref_run_batched/N60_K5_s", None, round(t_ref, 3))
+
+    # "default" = reference accuracy (strict parity); "coarse" = screening
+    # accuracy for the headline sweep speedup (final costs are always
+    # re-evaluated at reference accuracy, so relgap is a true quality gap).
+    n60 = {"ref_cost": ref.total_cost, "ref_moves": ref.n_adjustments,
+           "ref_seconds": t_ref}
+    for profile in ("default", "coarse"):
+        t0 = time.time()
+        fast = FastAssociationEngine(sc, kind="fast", seed=0,
+                                     profile=profile).run("random")
+        t_cold = time.time() - t0
+        t0 = time.time()
+        fast = FastAssociationEngine(sc, kind="fast", seed=0,
+                                     profile=profile).run("random")
+        t_warm = time.time() - t0
+        timings[f"fast_{profile}_cold_n60_k5"] = t_cold
+        timings[f"fast_{profile}_warm_n60_k5"] = t_warm
+        tag = f"N60_K5/{profile}"
+        report(f"assoc_scale/fast_cold/{tag}_s", None, round(t_cold, 3))
+        report(f"assoc_scale/fast_warm/{tag}_s", None, round(t_warm, 3))
+        report(f"assoc_scale/speedup_warm/{tag}", None,
+               round(t_ref / max(t_warm, 1e-9), 2))
+        relgap = (fast.total_cost - ref.total_cost) / ref.total_cost
+        report(f"assoc_scale/cost_relgap/{tag}", None, f"{relgap:+.2e}")
+        n60[profile] = {"seconds_warm": t_warm, "cost": fast.total_cost,
+                        "moves": fast.n_adjustments, "cost_relgap": relgap}
+    out["n60"] = n60
+
+    # deterministic parity gate (no exchanges -> both engines are
+    # steepest-transfer-descent and must land on the same stable point)
+    ref_d = AssociationEngine(sc, kind="fast", seed=0).run_batched(
+        "nearest", exchange_samples=0)
+    fast_d = FastAssociationEngine(sc, kind="fast", seed=0).run(
+        "nearest", exchange_samples=0)
+    parity = abs(ref_d.total_cost - fast_d.total_cost) / ref_d.total_cost
+    report("assoc_scale/parity_rel_gap/N60_K5", None, f"{parity:.2e}")
+    out["parity_rel_gap"] = parity
+
+    # -- large-scenario end-to-end sweeps (fast engine only) ----------------
+    scale = {}
+    for n, k, profile, exchanges, max_moves in SCALE_POINTS:
+        sc = make_large_scenario(n, k, seed=0)
+        eng = FastAssociationEngine(sc, kind="fast", seed=0, profile=profile)
+        t0 = time.time()
+        res = eng.run("nearest", max_moves=max_moves,
+                      exchange_samples=exchanges)
+        dt = time.time() - t0
+        tag = f"N{n}_K{k}"
+        timings[f"fast_{tag.lower()}"] = dt
+        report(f"assoc_scale/fast/{tag}_s", None, round(dt, 3))
+        report(f"assoc_scale/fast/{tag}_moves", None, res.n_adjustments)
+        report(f"assoc_scale/fast/{tag}_cost", None, round(res.total_cost, 2))
+        # trace endpoints share the sweep profile, so the drop measures pure
+        # descent improvement, free of cross-profile evaluation bias
+        improved = (res.cost_trace[0] - res.cost_trace[-1]) / res.cost_trace[0]
+        report(f"assoc_scale/fast/{tag}_cost_drop", None, round(improved, 4))
+        scale[tag] = {"seconds": dt, "moves": res.n_adjustments,
+                      "cost": res.total_cost, "cost_drop": improved}
+    out["scale"] = scale
+
+    report("assoc_scale/runtime_s", None, round(time.time() - t_start, 3))
+    return out

@@ -13,12 +13,18 @@ import os
 import sys
 import traceback
 
+# allow `python benchmarks/run.py` as well as `python -m benchmarks.run`,
+# with or without PYTHONPATH=src
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: cost,convergence,training,"
-                         "local_iters,kernels,roofline")
+                         "local_iters,kernels,roofline,assoc_scale")
     ap.add_argument("--rounds", type=int, default=20)
     args = ap.parse_args()
 
@@ -48,6 +54,8 @@ def main() -> None:
                                       fromlist=["run"]).run(report),
         "roofline": lambda: __import__("benchmarks.roofline_table",
                                        fromlist=["run"]).run(report),
+        "assoc_scale": lambda: __import__("benchmarks.assoc_scale",
+                                          fromlist=["run"]).run(report),
     }
     chosen = (args.only.split(",") if args.only else list(sections))
     ok = True
@@ -60,9 +68,28 @@ def main() -> None:
             report(f"{name}/FAILED", None, "see stderr")
 
     os.makedirs("experiments", exist_ok=True)
-    with open("experiments/bench_results.json", "w") as f:
-        json.dump({k: v for k, v in results.items()
-                   if not callable(v)}, f, indent=1, default=str)
+    out_path = "experiments/bench_results.json"
+    fresh = {k: v for k, v in results.items() if not callable(v)}
+    merged = {}
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+        # rotate a baseline for scripts/bench_guard.py ONLY when this run
+        # refreshed the guarded assoc_scale section — a cost-only or crashed
+        # run must not destroy the guard's comparison point
+        if "assoc_scale" in fresh:
+            os.replace(out_path, "experiments/bench_results.prev.json")
+    # accumulate sections across --only runs, but drop stale data for any
+    # section that was chosen this run and FAILED — absence signals failure
+    for name in chosen:
+        if name not in fresh:
+            merged.pop(name, None)
+    merged.update(fresh)
+    with open(out_path, "w") as f:
+        json.dump(merged, f, indent=1, default=str)
     if not ok:
         sys.exit(1)
 

@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""Guard against association-benchmark timing regressions.
+
+``benchmarks/run.py`` rotates the previous ``experiments/bench_results.json``
+to ``experiments/bench_results.prev.json`` before writing fresh results.
+This script diffs the ``assoc_scale`` timings of the two files and fails
+(exit 1) when any timing regressed by more than ``--max-ratio`` (default 2x).
+
+Usage:
+    python benchmarks/run.py --only assoc_scale
+    python scripts/bench_guard.py            # compares current vs previous
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_timings(path: str) -> dict[str, float] | None:
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        section = data.get("assoc_scale") or {}
+        timings = section.get("timings") or {}
+        return {k: float(v) for k, v in timings.items()}
+    except (OSError, ValueError, TypeError) as e:
+        print(f"bench_guard: unreadable results file {path} ({e})")
+        return None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default="experiments/bench_results.json")
+    ap.add_argument("--baseline", default="experiments/bench_results.prev.json")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="fail when current > ratio * baseline")
+    args = ap.parse_args()
+
+    cur = load_timings(args.current)
+    if cur is None:
+        print(f"bench_guard: no current results at {args.current} "
+              "(run `python benchmarks/run.py --only assoc_scale` first)")
+        return 1
+    if not cur:
+        print("bench_guard: current results carry no assoc_scale timings")
+        return 1
+    base = load_timings(args.baseline)
+    if not base:
+        print(f"bench_guard: no baseline at {args.baseline}; nothing to "
+              "compare (first run passes trivially)")
+        return 0
+
+    regressions = []
+    for name in sorted(set(base) & set(cur)):
+        ratio = cur[name] / max(base[name], 1e-12)
+        flag = " <-- REGRESSION" if ratio > args.max_ratio else ""
+        print(f"{name}: {base[name]:.3f}s -> {cur[name]:.3f}s "
+              f"({ratio:.2f}x){flag}")
+        if ratio > args.max_ratio:
+            regressions.append(name)
+    only_new = sorted(set(cur) - set(base))
+    if only_new:
+        print("new timings (no baseline): " + ", ".join(only_new))
+
+    if regressions:
+        print(f"bench_guard: FAIL — {len(regressions)} timing(s) regressed "
+              f">{args.max_ratio}x: {', '.join(regressions)}")
+        return 1
+    print("bench_guard: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

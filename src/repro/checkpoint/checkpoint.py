@@ -46,7 +46,7 @@ def save_checkpoint(directory: str, step: int, tree: Any, *,
                     extras: dict | None = None,
                     max_shard_bytes: int = 1 << 30) -> str:
     """Synchronous atomic save; returns the checkpoint path."""
-    leaves_with_paths, _ = jax.tree.flatten_with_path(tree)
+    leaves_with_paths, _ = jax.tree_util.tree_flatten_with_path(tree)
     names = [_key_str(p) for p, _ in leaves_with_paths]
     arrays = [np.asarray(v) for _, v in leaves_with_paths]
 
@@ -107,7 +107,7 @@ def load_checkpoint(directory: str, *, step: int | None = None,
     if template is None:
         return step, data, manifest["extras"]
 
-    leaves_with_paths, treedef = jax.tree.flatten_with_path(template)
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = [data[_key_str(p)] for p, _ in leaves_with_paths]
     tree = jax.tree.unflatten(treedef, leaves)
     if shardings is not None:

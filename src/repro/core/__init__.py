@@ -4,12 +4,14 @@ hierarchical aggregation, and update compression."""
 from repro.core.cost_model import (DeviceParams, LearningParams, RAConstants,
                                    ServerParams, global_cost, ra_constants,
                                    ra_objective)
-from repro.core.scenario import Scenario, make_scenario
+from repro.core.scenario import Scenario, make_large_scenario, make_scenario
 from repro.core.resource_allocation import (RASolution, beta_of_f, solve,
                                             solve_exact, solve_fixed_point,
                                             solve_paper, solve_reference)
 from repro.core.edge_association import (AssociationEngine, AssociationResult,
-                                         GroupSolver, evaluate_scheme)
+                                         GroupSolver, evaluate_scheme,
+                                         solve_group)
+from repro.core.assoc_fast import FastAssociationEngine
 from repro.core.hierarchy import (SyncLevel, SyncSchedule, cloud_aggregate,
                                   edge_aggregate, hierarchical_sync, psum_mean)
 from repro.core.compression import Int8Compressor, TopKCompressor
@@ -17,10 +19,11 @@ from repro.core.compression import Int8Compressor, TopKCompressor
 __all__ = [
     "DeviceParams", "LearningParams", "RAConstants", "ServerParams",
     "global_cost", "ra_constants", "ra_objective",
-    "Scenario", "make_scenario",
+    "Scenario", "make_large_scenario", "make_scenario",
     "RASolution", "beta_of_f", "solve", "solve_exact", "solve_fixed_point",
     "solve_paper", "solve_reference",
-    "AssociationEngine", "AssociationResult", "GroupSolver", "evaluate_scheme",
+    "AssociationEngine", "AssociationResult", "FastAssociationEngine",
+    "GroupSolver", "evaluate_scheme", "solve_group",
     "SyncLevel", "SyncSchedule", "cloud_aggregate", "edge_aggregate",
     "hierarchical_sync", "psum_mean",
     "Int8Compressor", "TopKCompressor",

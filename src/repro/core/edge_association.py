@@ -53,6 +53,63 @@ SCHEME_KINDS = ("optimal", "fast", "paper", "comp_only", "comm_only",
                 "uniform", "proportional")
 
 
+def _fixed_eval(c: RAConstants, mask, beta, random_f) -> ra.RASolution:
+    """Evaluate (18) at a fixed (random-f, given-beta) point — no optimization."""
+    from repro.core.cost_model import ra_objective
+    f = jnp.clip(random_f, c.f_min, c.f_max)
+    safe_beta = jnp.where(mask, jnp.maximum(beta, 1e-12), 1.0)
+    cost = jnp.where(jnp.any(mask), ra_objective(c, mask, f, safe_beta), 0.0)
+    deadline = jnp.max(jnp.where(mask, c.d / safe_beta + c.e / f, 0.0))
+    return ra.RASolution(f=f, beta=jnp.where(mask, beta, 0.0),
+                         cost=cost, deadline=deadline)
+
+
+def solve_group(kind: str, c: RAConstants, mask, *, random_f=None,
+                inv_dist_row=None, profile: str = "default") -> ra.RASolution:
+    """Pure single-group RA dispatch shared by :class:`GroupSolver` and the
+    device-resident engine in :mod:`repro.core.assoc_fast`.
+
+    ``c`` holds ONE server's constants; ``mask`` selects the group members.
+    ``random_f`` / ``inv_dist_row`` supply the fixed decisions the degenerate
+    §V.A schemes need; ``profile`` picks a :data:`ra.SCREEN_PROFILES` preset
+    for the ``fast`` kind (the others are profile-free).
+    """
+    n_active = jnp.maximum(jnp.sum(mask), 1)
+    if kind == "fast":
+        return ra.solve_fixed_point(c, mask, **ra.SCREEN_PROFILES[profile])
+    if kind in ("optimal", "paper"):
+        fn = {"optimal": ra.solve_exact, "paper": ra.solve_paper}[kind]
+        return fn(c, mask)
+    if kind == "comp_only":
+        beta = jnp.where(mask, 1.0 / n_active, 0.0)
+        return ra.optimize_f_given_beta(c, mask, beta)
+    if kind == "comm_only":
+        return ra.optimize_beta_given_f(c, mask, random_f)
+    if kind == "uniform":
+        beta = jnp.where(mask, 1.0 / n_active, 0.0)
+        return _fixed_eval(c, mask, beta, random_f)
+    if kind == "proportional":
+        score = jnp.where(mask, inv_dist_row, 0.0)
+        beta = score / jnp.maximum(jnp.sum(score), 1e-12)
+        return _fixed_eval(c, mask, beta, random_f)
+    raise ValueError(kind)
+
+
+@partial(jax.jit, static_argnames=("kind", "profile"))
+def _solve_batch_pure(consts, random_f, inv_dist, server_ids, masks, *,
+                      kind, profile):
+    """Module-level vmapped group solve so the jit cache is shared across
+    every GroupSolver instance (per-instance jits used to recompile each
+    bucket size for each new engine)."""
+
+    def one(s, m):
+        c = jax.tree.map(lambda x: x[s], consts)
+        return solve_group(kind, c, m, random_f=random_f,
+                           inv_dist_row=inv_dist[s], profile=profile)
+
+    return jax.vmap(one)(server_ids, masks)
+
+
 class GroupSolver:
     """Caches per-server RA constants and solves (server, member-mask) groups.
 
@@ -66,10 +123,13 @@ class GroupSolver:
       proportional — beta inversely proportional to distance, random fixed f
     """
 
-    def __init__(self, sc: Scenario, kind: str = "fast", *, seed: int = 0):
+    def __init__(self, sc: Scenario, kind: str = "fast", *, seed: int = 0,
+                 profile: str = "default"):
         assert kind in SCHEME_KINDS, kind
+        assert profile in ra.SCREEN_PROFILES, profile
         self.sc = sc
         self.kind = kind
+        self.profile = profile
         n, k = sc.n_devices, sc.n_servers
         # batched constants: leading axis = server
         self.consts = jax.vmap(
@@ -83,63 +143,78 @@ class GroupSolver:
         # inverse-distance scores per (server, device) for "proportional"
         inv = 1.0 / np.maximum(np.asarray(sc.dist), 1.0)
         self.inv_dist = jnp.asarray(inv.astype(np.float32))
-        self._batch_fn = jax.jit(jax.vmap(self._solve_one))
+
+    def with_profile(self, profile: str) -> "GroupSolver":
+        """A view of this solver at another iteration profile; the batched
+        constants and fixed random draws are shared, not recomputed."""
+        assert profile in ra.SCREEN_PROFILES, profile
+        if profile == self.profile:
+            return self
+        clone = object.__new__(GroupSolver)
+        clone.__dict__.update(self.__dict__)
+        clone.profile = profile
+        return clone
 
     def _consts_at(self, i) -> RAConstants:
         return jax.tree.map(lambda x: x[i], self.consts)
 
     def _solve_one(self, server_idx, mask):
-        c = self._consts_at(server_idx)
-        n_active = jnp.maximum(jnp.sum(mask), 1)
-        if self.kind in ("optimal", "fast", "paper"):
-            fn = {"optimal": ra.solve_exact, "fast": ra.solve_fixed_point,
-                  "paper": ra.solve_paper}[self.kind]
-            sol = fn(c, mask)
-        elif self.kind == "comp_only":
-            beta = jnp.where(mask, 1.0 / n_active, 0.0)
-            sol = ra.optimize_f_given_beta(c, mask, beta)
-        elif self.kind == "comm_only":
-            sol = ra.optimize_beta_given_f(c, mask, self.random_f)
-        elif self.kind == "uniform":
-            beta = jnp.where(mask, 1.0 / n_active, 0.0)
-            sol = self._fixed_eval(c, mask, beta)
-        else:  # proportional
-            score = jnp.where(mask, self.inv_dist[server_idx], 0.0)
-            beta = score / jnp.maximum(jnp.sum(score), 1e-12)
-            sol = self._fixed_eval(c, mask, beta)
-        return sol
+        return solve_group(self.kind, self._consts_at(server_idx), mask,
+                           random_f=self.random_f,
+                           inv_dist_row=self.inv_dist[server_idx],
+                           profile=self.profile)
 
-    def _fixed_eval(self, c: RAConstants, mask, beta) -> ra.RASolution:
-        from repro.core.cost_model import ra_objective
-        f = jnp.clip(self.random_f, c.f_min, c.f_max)
-        safe_beta = jnp.where(mask, jnp.maximum(beta, 1e-12), 1.0)
-        cost = jnp.where(jnp.any(mask), ra_objective(c, mask, f, safe_beta), 0.0)
-        deadline = jnp.max(jnp.where(mask, c.d / safe_beta + c.e / f, 0.0))
-        return ra.RASolution(f=f, beta=jnp.where(mask, beta, 0.0),
-                             cost=cost, deadline=deadline)
+    def _batch_fn(self, server_ids, masks):
+        return _solve_batch_pure(self.consts, self.random_f, self.inv_dist,
+                                 server_ids, masks, kind=self.kind,
+                                 profile=self.profile)
 
     def solve_batch(self, server_ids: jnp.ndarray, masks: jnp.ndarray) -> ra.RASolution:
         """Solve C candidate groups at once: server_ids (C,), masks (C, N).
 
-        Batches are padded to the next power of two so the vmapped solver
-        compiles once per bucket instead of once per batch size.
+        The batch is split into power-of-two chunks (binary decomposition of
+        C) so the vmapped solver still compiles once per bucket size, but no
+        all-zero padding rows burn full RA iterations — the old next-pow2
+        padding wasted up to 2x solves on odd batch sizes.
         """
         server_ids = np.asarray(server_ids)
         masks = np.asarray(masks)
         c = server_ids.shape[0]
-        bucket = 1 << max(c - 1, 0).bit_length() if c else 1
-        if bucket != c:
-            server_ids = np.concatenate(
-                [server_ids, np.zeros(bucket - c, server_ids.dtype)])
-            masks = np.concatenate(
-                [masks, np.zeros((bucket - c, masks.shape[1]), masks.dtype)])
-        sol = self._batch_fn(jnp.asarray(server_ids), jnp.asarray(masks))
-        return jax.tree.map(lambda x: x[:c], sol)
+        if c == 0:
+            sol = self._batch_fn(jnp.zeros(1, np.int64),
+                                 jnp.zeros((1, masks.shape[1]), bool))
+            return jax.tree.map(lambda x: x[:0], sol)
+        chunks = []
+        off = 0
+        while off < c:
+            size = 1 << ((c - off).bit_length() - 1)   # largest pow2 <= rest
+            chunks.append(self._batch_fn(
+                jnp.asarray(server_ids[off:off + size]),
+                jnp.asarray(masks[off:off + size])))
+            off += size
+        if len(chunks) == 1:
+            return chunks[0]
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs), *chunks)
 
 
 # ---------------------------------------------------------------------------
 # Association state and result
 # ---------------------------------------------------------------------------
+
+def initial_assignment(sc: Scenario, avail: np.ndarray, rng,
+                       init: str = "nearest") -> np.ndarray:
+    """Initial association (§II.C / Algorithm 3 line 2), shared by the host
+    and device engines so 'random' inits stay draw-for-draw identical."""
+    if init == "nearest":
+        dist = np.where(avail, np.asarray(sc.dist), np.inf)
+        return np.argmin(dist, axis=0)
+    if init == "random":
+        out = np.empty(sc.n_devices, dtype=np.int64)
+        for d in range(sc.n_devices):
+            out[d] = rng.choice(np.flatnonzero(avail[:, d]))
+        return out
+    raise ValueError(init)
+
 
 @dataclass
 class AssociationResult:
@@ -203,17 +278,7 @@ class AssociationEngine:
     # -- initial association (§II.C / Algorithm 3 line 2) -------------------
 
     def initial_assignment(self, init: str = "nearest") -> np.ndarray:
-        n, k = self.sc.n_devices, self.sc.n_servers
-        if init == "nearest":
-            dist = np.where(self.avail, np.asarray(self.sc.dist), np.inf)
-            return np.argmin(dist, axis=0)
-        if init == "random":
-            out = np.empty(n, dtype=np.int64)
-            for d in range(n):
-                choices = np.flatnonzero(self.avail[:, d])
-                out[d] = self.rng.choice(choices)
-            return out
-        raise ValueError(init)
+        return initial_assignment(self.sc, self.avail, self.rng, init)
 
     # -- permission test -----------------------------------------------------
 
@@ -423,7 +488,8 @@ class AssociationEngine:
 # ---------------------------------------------------------------------------
 
 def evaluate_scheme(sc: Scenario, scheme: str, *, seed: int = 0,
-                    batched: bool = True) -> AssociationResult:
+                    batched: bool = True, engine: str = "fast",
+                    profile: str = "default") -> AssociationResult:
     """Run one of the paper's §V.A comparison schemes end-to-end.
 
       hfel           — edge association + full joint RA (the paper's algorithm)
@@ -433,18 +499,33 @@ def evaluate_scheme(sc: Scenario, scheme: str, *, seed: int = 0,
       comm_opt       — association + optimal-beta / random-f RA
       uniform        — association + uniform-beta / random-f (no RA opt.)
       proportional   — association + inverse-distance beta / random-f
+
+    ``engine`` selects the association iterator for the iterative schemes:
+      fast     — device-resident fused-sweep engine (repro.core.assoc_fast)
+      batched  — host-loop steepest descent (AssociationEngine.run_batched)
+      loop     — faithful Algorithm 3 (AssociationEngine.run)
+    ``batched=False`` is a legacy alias for ``engine="loop"``.
     """
     kind = {"hfel": "fast", "random": "fast", "greedy": "fast",
             "comp_opt": "comp_only", "comm_opt": "comm_only",
             "uniform": "uniform", "proportional": "proportional"}[scheme]
-    eng = AssociationEngine(sc, kind=kind, seed=seed)
     if scheme in ("random", "greedy"):
+        eng = AssociationEngine(sc, kind=kind, seed=seed)
         init = "random" if scheme == "random" else "nearest"
         assignment = eng.initial_assignment(init)
         groups = eng._groups_of(assignment)
         return eng._finalize(assignment, groups, 0, 0,
                              [eng._total(groups)])
     init = "random"
-    if batched:
+    if not batched:
+        engine = "loop"
+    if engine == "fast":
+        from repro.core.assoc_fast import FastAssociationEngine
+        return FastAssociationEngine(sc, kind=kind, seed=seed,
+                                     profile=profile).run(init)
+    eng = AssociationEngine(sc, kind=kind, seed=seed)
+    if engine == "batched":
         return eng.run_batched(init)
-    return eng.run(init)
+    if engine == "loop":
+        return eng.run(init)
+    raise ValueError(engine)

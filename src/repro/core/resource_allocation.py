@@ -62,6 +62,40 @@ class RASolution:
     deadline: jnp.ndarray   # scalar t* = max_n d/beta + e/f
 
 
+def _golden_min(fn, lo, hi, n_iter: int):
+    """Golden-section minimize with the classic single-eval recurrence.
+
+    Each iteration shrinks the bracket by the golden ratio while evaluating
+    ``fn`` ONCE (the surviving interior probe is reused via G^2 = 1 - G),
+    instead of the two evaluations per iteration of the naive form — the
+    dominant sequential-depth cost of every solver here. ``lo``/``hi`` may be
+    arrays (vectorized independent searches); returns the bracket midpoint.
+    """
+    m1 = hi - _GOLDEN * (hi - lo)
+    m2 = lo + _GOLDEN * (hi - lo)
+    c1, c2 = fn(m1), fn(m2)
+
+    def body(_, st):
+        lo, hi, m1, m2, c1, c2 = st
+        go_right = c1 > c2
+        lo = jnp.where(go_right, m1, lo)
+        hi = jnp.where(go_right, hi, m2)
+        m1n = hi - _GOLDEN * (hi - lo)
+        m2n = lo + _GOLDEN * (hi - lo)
+        # the surviving probe becomes the opposite interior point; only the
+        # freshly exposed point needs an evaluation
+        point = jnp.where(go_right, m2n, m1n)
+        cp = fn(point)
+        m1_new = jnp.where(go_right, m2, point)
+        c1_new = jnp.where(go_right, c2, cp)
+        m2_new = jnp.where(go_right, point, m1)
+        c2_new = jnp.where(go_right, cp, c1)
+        return lo, hi, m1_new, m2_new, c1_new, c2_new
+
+    lo, hi, *_ = lax.fori_loop(0, n_iter, body, (lo, hi, m1, m2, c1, c2))
+    return 0.5 * (lo + hi)
+
+
 def _masked_beta_norm(s: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     """Normalize positive scores s to sum to 1 over the active set."""
     s = jnp.where(mask, s, 0.0)
@@ -140,38 +174,51 @@ def solve_paper(c: RAConstants, mask: jnp.ndarray, *, n_steps: int = 400) -> RAS
 # Solver 2 — KKT fixed point (fast screening solver)
 # ---------------------------------------------------------------------------
 
-def _deadline_bracket(c: RAConstants, mask):
+def _deadline_bracket(c: RAConstants, mask, n_bracket: int = 60):
     """Feasible deadline range.
 
     Lower: smallest t with sum_n d_n/(t - e_n/f_max) <= 1 (every device at
     max frequency, bandwidth exactly exhausted). Upper: same with f_min.
-    Both found by bisection on the monotone sum.
+    Both bisections run simultaneously on a stacked (2, N) array so the
+    sequential depth is ``n_bracket`` steps, not 2x that.
     """
-    def sum_beta_min(t, f):
-        slack = t - c.e / f
+    f2 = jnp.stack([c.f_max, c.f_min])                         # (2, N)
+
+    def sum_beta_min(t):
+        slack = t[:, None] - c.e / f2
         b = jnp.where(mask, c.d / jnp.maximum(slack, _EPS), 0.0)
         b = jnp.where(mask & (slack <= 0), 1e6, b)
-        return jnp.sum(b)
+        return jnp.sum(b, axis=-1)
 
-    def solve_t(f):
-        lo = jnp.max(jnp.where(mask, c.e / f + c.d, 0.0))      # per-device floor
-        hi = lo + jnp.sum(jnp.where(mask, c.d, 0.0)) * 1e4 + 1.0
+    lo = jnp.max(jnp.where(mask, c.e / f2 + c.d, 0.0), axis=-1)  # device floor
+    hi = lo + jnp.sum(jnp.where(mask, c.d, 0.0)) * 1e4 + 1.0
 
-        def body(_, lohi):
-            lo_, hi_ = lohi
-            mid = 0.5 * (lo_ + hi_)
-            ok = sum_beta_min(mid, f) <= 1.0
-            return (jnp.where(ok, lo_, mid), jnp.where(ok, mid, hi_))
+    def body(_, lohi):
+        lo_, hi_ = lohi
+        mid = 0.5 * (lo_ + hi_)
+        ok = sum_beta_min(mid) <= 1.0
+        return (jnp.where(ok, lo_, mid), jnp.where(ok, mid, hi_))
 
-        lo_, hi_ = lax.fori_loop(0, 60, body, (lo, hi))
-        return hi_
-
-    return solve_t(c.f_max), solve_t(c.f_min)
+    lo_, hi_ = lax.fori_loop(0, n_bracket, body, (lo, hi))
+    return hi_[0], hi_[1]
 
 
-@partial(jax.jit, static_argnames=("n_golden", "n_inner"))
+# Iteration presets for :func:`solve_fixed_point`. "default" is the reference
+# accuracy used by the association parity gates; "screen" / "coarse" trade a
+# little deadline resolution for 2-4x fewer inner iterations when the solver
+# runs inside the fused candidate sweeps of ``repro.core.assoc_fast`` at large
+# device counts (every candidate group pays n_golden * n_inner + 2 * n_bracket
+# vector ops, so these knobs dominate sweep cost).
+SCREEN_PROFILES: dict[str, dict[str, int]] = {
+    "default": dict(n_golden=48, n_inner=12, n_bracket=60),
+    "screen": dict(n_golden=32, n_inner=8, n_bracket=40),
+    "coarse": dict(n_golden=16, n_inner=6, n_bracket=24),
+}
+
+
+@partial(jax.jit, static_argnames=("n_golden", "n_inner", "n_bracket"))
 def solve_fixed_point(c: RAConstants, mask: jnp.ndarray, *, n_golden: int = 48,
-                      n_inner: int = 12) -> RASolution:
+                      n_inner: int = 12, n_bracket: int = 60) -> RASolution:
     """Golden-section on the common deadline t along the KKT path.
 
     At a fixed t, beta follows eq. (19) and f the tightness relation
@@ -181,8 +228,10 @@ def solve_fixed_point(c: RAConstants, mask: jnp.ndarray, *, n_golden: int = 48,
     *exact objective* (18) is evaluated along this one-parameter family and
     minimized by golden-section: exact whenever the interior KKT structure
     holds, and never pathological when it does not.
+
+    ``(n_golden, n_inner, n_bracket)`` presets live in :data:`SCREEN_PROFILES`.
     """
-    t_lo, t_hi = _deadline_bracket(c, mask)
+    t_lo, t_hi = _deadline_bracket(c, mask, n_bracket)
     t_lo = t_lo * (1.0 + 1e-6)
     t_hi = jnp.maximum(t_hi * 1.5, t_lo * 4.0) + 1.0
 
@@ -202,15 +251,7 @@ def solve_fixed_point(c: RAConstants, mask: jnp.ndarray, *, n_golden: int = 48,
         safe_beta = jnp.where(mask, jnp.maximum(beta, _EPS), 1.0)
         return ra_objective(c, mask, f, safe_beta)
 
-    def body(_, lohi):
-        lo, hi = lohi
-        m1 = hi - _GOLDEN * (hi - lo)
-        m2 = lo + _GOLDEN * (hi - lo)
-        go_right = cost_of_t(m1) > cost_of_t(m2)
-        return (jnp.where(go_right, m1, lo), jnp.where(go_right, hi, m2))
-
-    lo, hi = lax.fori_loop(0, n_golden, body, (t_lo, t_hi))
-    f, beta = fb_of_t(0.5 * (lo + hi))
+    f, beta = fb_of_t(_golden_min(cost_of_t, t_lo, t_hi, n_golden))
     return _finalize(c, mask, f, beta)
 
 
@@ -242,15 +283,7 @@ def _inner_beta_f(c: RAConstants, mask, t, nu, n_beta: int = 32):
         f = f_of_beta(beta)
         return c.a / jnp.maximum(beta, _EPS) + c.b * f**2 + nu * beta
 
-    def body(_, lohi):
-        lo, hi = lohi
-        m1 = hi - _GOLDEN * (hi - lo)
-        m2 = lo + _GOLDEN * (hi - lo)
-        go_right = psi(m1) > psi(m2)
-        return (jnp.where(go_right, m1, lo), jnp.where(go_right, hi, m2))
-
-    lo, hi = lax.fori_loop(0, n_beta, body, (b_lo, b_hi))
-    beta = 0.5 * (lo + hi)
+    beta = _golden_min(psi, b_lo, b_hi, n_beta)    # vectorized across devices
     return beta, f_of_beta(beta)
 
 
@@ -293,15 +326,7 @@ def solve_exact(c: RAConstants, mask: jnp.ndarray, *, n_outer: int = 44) -> RASo
         _, _, value = _solve_fixed_t(c, mask, t)
         return value + c.w * t
 
-    def body(_, lohi):
-        lo, hi = lohi
-        m1 = hi - _GOLDEN * (hi - lo)
-        m2 = lo + _GOLDEN * (hi - lo)
-        go_right = j_of_t(m1) > j_of_t(m2)
-        return (jnp.where(go_right, m1, lo), jnp.where(go_right, hi, m2))
-
-    lo, hi = lax.fori_loop(0, n_outer, body, (t_lo, t_hi))
-    t_star = 0.5 * (lo + hi)
+    t_star = _golden_min(j_of_t, t_lo, t_hi, n_outer)
     beta, f, _ = _solve_fixed_t(c, mask, t_star)
     return _finalize(c, mask, f, beta)
 
@@ -390,15 +415,7 @@ def optimize_f_given_beta(c: RAConstants, mask: jnp.ndarray,
         f = f_of_t(t)
         return jnp.sum(jnp.where(mask, c.b * f**2, 0.0)) + c.w * t
 
-    def body(_, lohi):
-        lo, hi = lohi
-        m1 = hi - _GOLDEN * (hi - lo)
-        m2 = lo + _GOLDEN * (hi - lo)
-        go_right = u_of_t(m1) > u_of_t(m2)
-        return (jnp.where(go_right, m1, lo), jnp.where(go_right, hi, m2))
-
-    lo, hi = lax.fori_loop(0, 48, body, (t_lo, t_hi))
-    f = f_of_t(0.5 * (lo + hi))
+    f = f_of_t(_golden_min(u_of_t, t_lo, t_hi, 48))
     any_active = jnp.any(mask)
     cost = jnp.where(any_active, ra_objective(c, mask, f, safe_beta), 0.0)
     deadline = jnp.max(jnp.where(mask, c.d / safe_beta + c.e / f, 0.0))
@@ -461,15 +478,7 @@ def optimize_beta_given_f(c: RAConstants, mask: jnp.ndarray,
         beta = betas(t, solve_nu(t))
         return jnp.sum(jnp.where(mask, c.a / beta, 0.0)) + c.w * t
 
-    def gbody(_, lohi):
-        lo, hi = lohi
-        m1 = hi - _GOLDEN * (hi - lo)
-        m2 = lo + _GOLDEN * (hi - lo)
-        go_right = v_of_t(m1) > v_of_t(m2)
-        return (jnp.where(go_right, m1, lo), jnp.where(go_right, hi, m2))
-
-    lo, hi = lax.fori_loop(0, 44, gbody, (t_lo * (1 + 1e-6), t_hi))
-    t_star = 0.5 * (lo + hi)
+    t_star = _golden_min(v_of_t, t_lo * (1 + 1e-6), t_hi, 44)
     beta = _masked_beta_norm(betas(t_star, solve_nu(t_star)), mask)
     return _finalize(c, mask, jnp.clip(f, c.f_min, c.f_max), beta)
 

@@ -58,10 +58,44 @@ def make_scenario(n_devices: int, n_servers: int, *, seed: int = 0,
     fully-dense evaluation (availability is then only distance-ranked).
     """
     rng = np.random.default_rng(seed)
-    f32 = np.float32
-
     dev_xy = rng.uniform(0.0, area_m, size=(n_devices, 2))
     srv_xy = rng.uniform(0.0, area_m, size=(n_servers, 2))
+    return _assemble(rng, dev_xy, srv_xy, reach_m, lp)
+
+
+def make_large_scenario(n_devices: int, n_servers: int, *, seed: int = 0,
+                        area_m: float | None = None,
+                        reach_m: float | None = None,
+                        spread_m: float = 120.0,
+                        lp: LearningParams | None = None) -> Scenario:
+    """Cluster-structured scenario for the large regimes (up to N~2000, K~50)
+    the association scaling benchmarks exercise.
+
+    Unlike :func:`make_scenario`'s fixed 500m box, the area grows with the
+    server count (constant server density), devices drop as Gaussian clusters
+    of width ``spread_m`` around a random anchor server, and ``reach_m``
+    defaults to a *restricted* radius so availability is sparse — each device
+    can reach only its nearby handful of servers, the realistic multi-cell
+    regime (every device is still guaranteed its nearest server).
+    """
+    rng = np.random.default_rng(seed)
+    area = area_m if area_m is not None else 500.0 * np.sqrt(n_servers / 5.0)
+    reach = reach_m if reach_m is not None else 3.0 * spread_m
+    srv_xy = rng.uniform(0.0, area, size=(n_servers, 2))
+    anchor = rng.integers(0, n_servers, n_devices)
+    dev_xy = np.clip(srv_xy[anchor]
+                     + rng.normal(0.0, spread_m, size=(n_devices, 2)),
+                     0.0, area)
+    return _assemble(rng, dev_xy, srv_xy, reach, lp)
+
+
+def _assemble(rng: np.random.Generator, dev_xy: np.ndarray,
+              srv_xy: np.ndarray, reach_m: float,
+              lp: LearningParams | None) -> Scenario:
+    """Draw Table II device/server parameters for given node positions."""
+    f32 = np.float32
+    n_devices = dev_xy.shape[0]
+    n_servers = srv_xy.shape[0]
     dist = np.linalg.norm(srv_xy[:, None, :] - dev_xy[None, :, :], axis=-1)
 
     data_bits = rng.uniform(5e6, 10e6, n_devices) * 8.0          # 5-10 MB

@@ -1,0 +1,124 @@
+"""Device-resident association engine: parity with the host reference,
+permission semantics, and toggle-cache consistency."""
+
+import numpy as np
+import pytest
+
+from repro.core import make_scenario
+from repro.core.assoc_fast import FastAssociationEngine
+from repro.core.edge_association import AssociationEngine
+from repro.core.scenario import make_large_scenario
+
+PARITY_CASES = [(14, 3, 0), (18, 4, 1), (16, 4, 2)]
+
+
+@pytest.mark.parametrize("n,k,seed", PARITY_CASES)
+def test_parity_with_reference_stable_point(n, k, seed):
+    """With exchanges disabled both engines are deterministic steepest
+    transfer descent and must land on the same stable point (the PR's
+    1e-4 parity gate); with exchanges the fast engine must not be worse."""
+    sc = make_scenario(n, k, seed=seed)
+    ref = AssociationEngine(sc, kind="fast", seed=0).run_batched(
+        "nearest", exchange_samples=0)
+    fast = FastAssociationEngine(sc, kind="fast", seed=0).run(
+        "nearest", exchange_samples=0)
+    assert abs(fast.total_cost - ref.total_cost) <= 1e-4 * ref.total_cost
+    assert fast.total_cost <= ref.total_cost + 1e-4 * ref.total_cost
+    # steepest descent with identical tie-breaking: same stable assignment
+    assert np.array_equal(fast.assignment, ref.assignment)
+
+
+def test_parity_with_exchanges_not_worse():
+    sc = make_scenario(16, 4, seed=3)
+    ref = AssociationEngine(sc, kind="fast", seed=0).run_batched("nearest")
+    fast = FastAssociationEngine(sc, kind="fast", seed=0).run("nearest")
+    # exchange sampling differs (numpy vs jax PRNG); both must reach a
+    # stable point no worse than a few percent of each other
+    assert fast.total_cost <= ref.total_cost * 1.02
+
+
+def test_permission_semantics_match_reference_move_for_move():
+    """Tiny fixture, no exchanges: the fast engine must replicate the
+    reference engine's applied moves exactly under both permission rules."""
+    sc = make_scenario(10, 3, seed=7)
+    for permission in ("utilitarian", "pareto"):
+        ref = AssociationEngine(sc, kind="fast", permission=permission,
+                                seed=0).run_batched("nearest",
+                                                    exchange_samples=0)
+        fast = FastAssociationEngine(sc, kind="fast", permission=permission,
+                                     seed=0).run("nearest",
+                                                 exchange_samples=0)
+        assert fast.n_adjustments == ref.n_adjustments, permission
+        assert np.array_equal(fast.assignment, ref.assignment), permission
+        np.testing.assert_allclose(np.asarray(fast.cost_trace),
+                                   np.asarray(ref.cost_trace),
+                                   rtol=1e-4)
+
+
+def test_pareto_at_most_utilitarian_moves():
+    sc = make_scenario(12, 3, seed=5)
+    ut = FastAssociationEngine(sc, kind="fast", permission="utilitarian",
+                               seed=0).run("random", exchange_samples=0)
+    pa = FastAssociationEngine(sc, kind="fast", permission="pareto",
+                               seed=0).run("random", exchange_samples=0)
+    assert pa.n_adjustments <= ut.n_adjustments
+
+
+def test_toggle_cache_matches_uncached_solves():
+    """The incremental bitset/toggle cache must agree with from-scratch
+    group solves at the stable point — both the current-group costs and a
+    sample of single-device-toggled variants."""
+    sc = make_scenario(12, 3, seed=4)
+    eng = FastAssociationEngine(sc, kind="fast", seed=0)
+    eng.run("nearest", exchange_samples=0)
+    st = eng.last_state
+    member = st["member"]
+    k, n = member.shape
+    cloud = np.asarray(eng.cloud_const)
+
+    def fresh_cost(server, mask):
+        sol = eng.solver.solve_batch(np.array([server]), mask[None, :])
+        base = float(np.asarray(sol.cost)[0])
+        return base + (cloud[server] if mask.any() else 0.0)
+
+    for s in range(k):
+        assert fresh_cost(s, member[s]) == pytest.approx(
+            float(st["cur_cost"][s]), rel=1e-5, abs=1e-6)
+    rng = np.random.default_rng(0)
+    for s, d in zip(rng.integers(0, k, 6), rng.integers(0, n, 6)):
+        toggled = member[s].copy()
+        toggled[d] = ~toggled[d]
+        assert fresh_cost(s, toggled) == pytest.approx(
+            float(st["toggle_cost"][s, d]), rel=1e-5, abs=1e-6)
+
+
+def test_monotone_trace_stability_and_availability():
+    sc = make_scenario(18, 4, seed=0, reach_m=300.0)
+    eng = FastAssociationEngine(sc, kind="fast", seed=0)
+    res = eng.run("random")
+    trace = np.asarray(res.cost_trace)
+    assert np.all(np.diff(trace) <= 1e-6 * trace[:-1]), "cost must decrease"
+    avail = np.asarray(sc.avail)
+    for dev, srv in enumerate(res.assignment):
+        assert avail[srv, dev]
+    # stability: restarting from the stable point applies no adjustment
+    res2 = FastAssociationEngine(sc, kind="fast", seed=0).run(
+        assignment=res.assignment)
+    assert res2.n_adjustments == 0
+
+
+def test_large_scenario_generator_shapes():
+    sc = make_large_scenario(2000, 50, seed=0)
+    assert sc.n_devices == 2000 and sc.n_servers == 50
+    assert sc.avail.shape == (50, 2000)
+    assert sc.avail.any(axis=0).all(), "every device reaches some server"
+    # sparse availability: restricted reach keeps the candidate set local
+    assert sc.avail.mean() < 0.5
+
+
+def test_scheme_kinds_run_on_fast_engine():
+    sc = make_scenario(10, 3, seed=6)
+    for kind in ("comp_only", "uniform", "proportional"):
+        res = FastAssociationEngine(sc, kind=kind, seed=0).run(
+            "nearest", exchange_samples=8)
+        assert np.isfinite(res.total_cost) and res.total_cost > 0

@@ -2,7 +2,8 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import make_scenario
 from repro.core.cost_model import (LearningParams, comm_energy, comm_time,

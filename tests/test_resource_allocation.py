@@ -8,7 +8,7 @@ the paper-faithful solver, the exact solver and the subgradient oracle.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import make_scenario
 from repro.core.cost_model import LearningParams, ra_constants, ra_objective
