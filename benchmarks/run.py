@@ -26,6 +26,12 @@ def main() -> None:
                     help="comma-separated subset: cost,convergence,training,"
                          "local_iters,kernels,roofline,assoc_scale")
     ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke mode: shrink the assoc_scale stress points "
+                         "(skips the multi-minute N>=1000 runs) so the "
+                         "section finishes in under a minute; quick results "
+                         "are printed but NOT persisted, so bench_guard "
+                         "baselines are never disturbed")
     args = ap.parse_args()
 
     results = {}
@@ -54,8 +60,9 @@ def main() -> None:
                                       fromlist=["run"]).run(report),
         "roofline": lambda: __import__("benchmarks.roofline_table",
                                        fromlist=["run"]).run(report),
-        "assoc_scale": lambda: __import__("benchmarks.assoc_scale",
-                                          fromlist=["run"]).run(report),
+        "assoc_scale": lambda: __import__(
+            "benchmarks.assoc_scale",
+            fromlist=["run"]).run(report, quick=args.quick),
     }
     chosen = (args.only.split(",") if args.only else list(sections))
     ok = True
@@ -67,21 +74,36 @@ def main() -> None:
             traceback.print_exc()
             report(f"{name}/FAILED", None, "see stderr")
 
+    if args.quick:
+        print("quick mode: results not persisted", flush=True)
+        if not ok:
+            sys.exit(1)
+        return
+
+    def load_json(path):
+        if not os.path.exists(path):
+            return {}
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            return {}
+
     os.makedirs("experiments", exist_ok=True)
     out_path = "experiments/bench_results.json"
+    prev_path = "experiments/bench_results.prev.json"
     fresh = {k: v for k, v in results.items() if not callable(v)}
-    merged = {}
-    if os.path.exists(out_path):
-        try:
-            with open(out_path) as f:
-                merged = json.load(f)
-        except (OSError, ValueError):
-            merged = {}
-        # rotate a baseline for scripts/bench_guard.py ONLY when this run
-        # refreshed the guarded assoc_scale section — a cost-only or crashed
-        # run must not destroy the guard's comparison point
-        if "assoc_scale" in fresh:
-            os.replace(out_path, "experiments/bench_results.prev.json")
+    merged = load_json(out_path)
+    # rotate baselines for scripts/bench_guard.py PER SECTION: only sections
+    # this run actually refreshed move their previous results into the
+    # baseline file. A `--only` run therefore cannot rotate away unrelated
+    # sections' baselines, and a crashed section keeps its comparison point.
+    rotated = {name: merged[name] for name in fresh if name in merged}
+    if rotated:
+        prev = load_json(prev_path)
+        prev.update(rotated)
+        with open(prev_path, "w") as f:
+            json.dump(prev, f, indent=1, default=str)
     # accumulate sections across --only runs, but drop stale data for any
     # section that was chosen this run and FAILED — absence signals failure
     for name in chosen:

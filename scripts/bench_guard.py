@@ -1,10 +1,16 @@
 #!/usr/bin/env python
-"""Guard against association-benchmark timing regressions.
+"""Guard against benchmark timing regressions.
 
-``benchmarks/run.py`` rotates the previous ``experiments/bench_results.json``
-to ``experiments/bench_results.prev.json`` before writing fresh results.
-This script diffs the ``assoc_scale`` timings of the two files and fails
-(exit 1) when any timing regressed by more than ``--max-ratio`` (default 2x).
+``benchmarks/run.py`` rotates the previous results of every section it
+refreshes into ``experiments/bench_results.prev.json`` (per-section, so a
+``--only`` run never disturbs other sections' baselines). This script diffs
+the ``timings`` dicts of every section present in the two files, prints a
+per-key speedup table, and fails (exit 1) when any timing shared by both
+files regressed by more than ``--max-ratio`` (default 2x).
+
+Sections or keys present in only one of current/previous are informational:
+newly added benchmarks must not fail the guard, and retired ones are only
+reported as removed.
 
 Usage:
     python benchmarks/run.py --only assoc_scale
@@ -20,14 +26,24 @@ import sys
 
 
 def load_timings(path: str) -> dict[str, float] | None:
+    """Flatten every section's ``timings`` dict to {"section/key": seconds}.
+
+    Returns None when the file is missing/unreadable, {} when it holds no
+    timing-bearing sections.
+    """
     if not os.path.exists(path):
         return None
     try:
         with open(path) as f:
             data = json.load(f)
-        section = data.get("assoc_scale") or {}
-        timings = section.get("timings") or {}
-        return {k: float(v) for k, v in timings.items()}
+        out: dict[str, float] = {}
+        for section, body in data.items():
+            timings = body.get("timings") if isinstance(body, dict) else None
+            if not isinstance(timings, dict):
+                continue
+            for key, value in timings.items():
+                out[f"{section}/{key}"] = float(value)
+        return out
     except (OSError, ValueError, TypeError) as e:
         print(f"bench_guard: unreadable results file {path} ({e})")
         return None
@@ -47,7 +63,7 @@ def main() -> int:
               "(run `python benchmarks/run.py --only assoc_scale` first)")
         return 1
     if not cur:
-        print("bench_guard: current results carry no assoc_scale timings")
+        print("bench_guard: current results carry no timings")
         return 1
     base = load_timings(args.baseline)
     if not base:
@@ -55,17 +71,30 @@ def main() -> int:
               "compare (first run passes trivially)")
         return 0
 
+    shared = sorted(set(base) & set(cur))
     regressions = []
-    for name in sorted(set(base) & set(cur)):
-        ratio = cur[name] / max(base[name], 1e-12)
-        flag = " <-- REGRESSION" if ratio > args.max_ratio else ""
-        print(f"{name}: {base[name]:.3f}s -> {cur[name]:.3f}s "
-              f"({ratio:.2f}x){flag}")
-        if ratio > args.max_ratio:
-            regressions.append(name)
+    if shared:
+        width = max(len(name) for name in shared)
+        header = (f"{'benchmark':<{width}}  {'baseline':>10}  "
+                  f"{'current':>10}  {'speedup':>8}")
+        print(header)
+        print("-" * len(header))
+        for name in shared:
+            speedup = base[name] / max(cur[name], 1e-12)
+            ratio = cur[name] / max(base[name], 1e-12)
+            flag = "  <-- REGRESSION" if ratio > args.max_ratio else ""
+            print(f"{name:<{width}}  {base[name]:>9.3f}s  {cur[name]:>9.3f}s"
+                  f"  {speedup:>7.2f}x{flag}")
+            if ratio > args.max_ratio:
+                regressions.append(name)
     only_new = sorted(set(cur) - set(base))
     if only_new:
         print("new timings (no baseline): " + ", ".join(only_new))
+    only_old = sorted(set(base) - set(cur))
+    if only_old:
+        print("removed timings (baseline only): " + ", ".join(only_old))
+    if not shared:
+        print("bench_guard: no overlapping timings; nothing to compare")
 
     if regressions:
         print(f"bench_guard: FAIL — {len(regressions)} timing(s) regressed "

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 verification with a meaningful green/red signal: run the full test
+# suite minus the seed_known_failure set (tests already broken in the seed
+# snapshot — see SEED_KNOWN_FAILURES in tests/conftest.py). Extra pytest
+# arguments pass through, e.g. `scripts/tier1.sh tests/test_assoc_fast.py`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -q -m "not seed_known_failure" "$@"

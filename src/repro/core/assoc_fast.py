@@ -1,5 +1,5 @@
-"""Device-resident edge association — fused candidate sweep with an
-incremental toggle-cost delta cache.
+"""Device-resident edge association — fused candidate sweeps with an
+incremental toggle-cost delta cache, in dense or compacted slot space.
 
 This is the performance engine behind Algorithm 3 / ``run_batched``: the whole
 steepest-descent adjustment loop runs inside ONE jitted ``lax.while_loop``
@@ -9,8 +9,8 @@ round-trip regardless of how many adjustments it applies. The reference
 round through Python loops, frozenset-keyed memo dicts, and one
 ``solve_batch`` host->device sync per candidate batch.
 
-Design
-------
+Dense design
+------------
 Association state is a ``(K, N)`` boolean membership mask on device. The key
 data structure is the *toggle-cost cache*::
 
@@ -29,16 +29,48 @@ so each steepest-descent round scans ALL N*K candidate transfers with zero
 solver calls, picks the best permitted move via ``lax`` reductions, and only
 then refreshes the cache. A move touches exactly two servers, so the refresh
 is a fused vmapped solve of ``2*(N+1)`` groups (each touched server's current
-mask plus its N single-device toggles) — O(K-free) fresh solves per move
-instead of the O(4*N*K) candidate pairs the naive sweep pays. Group costs
-here always include the server's cloud-aggregation constant when the group is
-non-empty, matching ``AssociationEngine.group_cost``.
+mask plus its N single-device toggles). Group costs here always include the
+server's cloud-aggregation constant when the group is non-empty, matching
+``AssociationEngine.group_cost``.
 
-Sampled *exchanges* (Definition 5) ride the same fused sweep: when no
-transfer is permitted, a ``lax.cond`` branch draws candidate device pairs
-with the on-device PRNG, evaluates both swapped groups for every pair in one
-vmapped solve, and applies the best permitted swap followed by the same
-two-row cache refresh.
+Compacted reachable-set design (``compact=True``, auto-on for sparse reach)
+---------------------------------------------------------------------------
+The dense refresh prices ``2*(N+1)`` candidate groups of vector width N even
+though a server can only ever gain devices it reaches. With the static
+per-server index maps of :func:`repro.core.scenario.reach_index_map`
+(``R`` = max reach count, padded), membership and toggle state live in
+``(K, R)`` *compacted slot space*: RA constants, the fixed random-f draws and
+inverse-distance rows are pre-gathered per server, so the per-move refresh
+solves ``2*(R+1)`` groups of width R — an ``(N/R)^2``-ish cut that is what
+makes full N=2000/K=50 convergence runs tractable (see
+``benchmarks/assoc_scale.py`` for measured ratios). The candidate argmin runs
+in the same compacted space with an explicit device-major tie-break key, so
+move selection matches the dense engine order-for-order; the chosen move is
+scattered back to the dense ``(K, N)`` mask kept alongside (two column
+scatters per move) so finalization and debugging read ordinary dense state.
+Padded slots carry garbage toggle costs by construction and are excluded from
+every candidate mask; they never influence a move.
+
+Sampled *exchanges* (Definition 5) ride the same fused sweep in both spaces:
+when no transfer is permitted, a ``lax.cond`` branch draws candidate device
+pairs with the on-device PRNG, evaluates both swapped groups for every pair
+in one vmapped solve, and applies the best permitted swap followed by the
+same two-row cache refresh. In compacted space the swapped masks are built by
+XOR-ing one-hot slot encodings (an out-of-reach slot encodes as the all-zero
+row, so unavailable swaps are naturally inert and additionally gated).
+
+Two-tier descent (:meth:`FastAssociationEngine.run_tiered`)
+-----------------------------------------------------------
+Screening profiles trade solve accuracy for sweep speed but leave a ~1% cost
+gap at the stable point. The tiered driver runs the adjustment loop once per
+profile of a :data:`repro.core.resource_allocation.TIER_PLANS` plan (default
+``"two_tier"`` = coarse then default), warm-starting each tier from the
+previous tier's stable assignment. The coarse tier applies nearly all moves
+cheaply; the default-accuracy polish then needs only a handful of moves to
+recover the reference-accuracy stable point, at a fraction of a default-only
+sweep's wall time. The concatenated ``cost_trace`` keeps each tier's
+evaluation seam (tier boundaries re-evaluate the same assignment at the new
+profile's accuracy, so the trace is monotone within tiers, not across them).
 
 The per-group solver is :func:`repro.core.edge_association.solve_group`, so
 every §V.A scheme kind works here; ``profile`` selects a
@@ -46,10 +78,9 @@ every §V.A scheme kind works here; ``profile`` selects a
 ("default" reproduces the reference engine bit-for-bit on the solve level,
 "screen"/"coarse" cut sweep cost ~2-4x for large-N scenarios).
 
-Compilation: one XLA program per ``(N, K, max_moves, exchange_samples, kind,
-profile, permission, min_residual)`` — not one per power-of-two batch bucket.
-The jit cache is module-global, so repeated engines on same-shaped scenarios
-reuse the compiled program.
+Compilation: one XLA program per ``(N or R, K, max_moves, exchange_samples,
+kind, profile, permission, min_residual)``. The jit cache is module-global,
+so repeated engines on same-shaped scenarios reuse the compiled program.
 """
 
 from __future__ import annotations
@@ -65,9 +96,10 @@ from repro.core import resource_allocation as ra
 from repro.core.cost_model import cloud_delay, cloud_energy, global_cost
 from repro.core.edge_association import (AssociationResult, GroupSolver,
                                          initial_assignment, solve_group)
-from repro.core.scenario import Scenario
+from repro.core.scenario import ReachIndex, Scenario, reach_index_map
 
 _INF = jnp.inf
+_I32_BIG = np.iinfo(np.int32).max
 
 
 def _group_cost_fn(kind, profile, consts, random_f, inv_dist, cloud_const):
@@ -82,13 +114,28 @@ def _group_cost_fn(kind, profile, consts, random_f, inv_dist, cloud_const):
     return cost
 
 
+def _compact_cost_fn(kind, profile, consts_c, random_f_c, inv_dist_c,
+                     cloud_const):
+    """Compacted-space twin of :func:`_group_cost_fn`: ``consts_c`` leaves,
+    ``random_f_c`` and ``inv_dist_c`` are pre-gathered per server at its
+    reachable-device indices, so masks are (R,) slot vectors."""
+
+    def cost(server_idx, mask):
+        c = jax.tree.map(lambda x: x[server_idx], consts_c)
+        sol = solve_group(kind, c, mask, random_f=random_f_c[server_idx],
+                          inv_dist_row=inv_dist_c[server_idx], profile=profile)
+        return sol.cost + jnp.where(jnp.any(mask), cloud_const[server_idx], 0.0)
+
+    return cost
+
+
 @partial(jax.jit, donate_argnums=(0, 1),
          static_argnames=("kind", "profile", "permission", "min_residual",
                           "max_moves", "exchange_samples"))
 def _run_device(member, assignment, key, consts, random_f, inv_dist, avail,
                 cloud_const, rel_tol, *, kind, profile, permission,
                 min_residual, max_moves, exchange_samples):
-    """The whole adjustment loop as one device program.
+    """The whole adjustment loop as one device program (dense (K, N) space).
 
     Returns (member, assignment, cur, toggle, n_moves, trace); ``trace[i]``
     is the surrogate total after move i (trace[0] = initial total), padded
@@ -220,11 +267,180 @@ def _run_device(member, assignment, key, consts, random_f, inv_dist, avail,
     return member, assignment, cur, toggle, moves, trace
 
 
+@partial(jax.jit, donate_argnums=(0, 1, 2),
+         static_argnames=("kind", "profile", "permission", "min_residual",
+                          "max_moves", "exchange_samples"))
+def _run_device_compact(member_c, member, assignment, key, consts_c,
+                        random_f_c, inv_dist_c, reach_idx, slot_valid,
+                        slot_of, cloud_const, rel_tol, *, kind, profile,
+                        permission, min_residual, max_moves,
+                        exchange_samples):
+    """The adjustment loop in compacted (K, R) reachable-slot space.
+
+    ``member_c[k, r]`` mirrors ``member[k, reach_idx[k, r]]`` for valid
+    slots; the toggle cache, candidate argmin, and two-row refresh all run at
+    width R, and each applied move is scattered back to the dense ``member``
+    mask. Returns (member_c, member, assignment, cur, toggle_c, n_moves,
+    trace) with the same trace convention as :func:`_run_device`.
+    """
+    k, r = member_c.shape
+    n = member.shape[1]
+    cost = _compact_cost_fn(kind, profile, consts_c, random_f_c, inv_dist_c,
+                            cloud_const)
+    cost_v = jax.vmap(cost)
+    eye = jnp.eye(r, dtype=bool)
+    idx_n = jnp.arange(n)
+    idx_k = jnp.arange(k, dtype=jnp.int32)
+    i32 = jnp.int32
+
+    def rows_costs(member_c, rows):
+        """Solve each row's current group and all R single-slot toggles."""
+        base = member_c[rows]                                     # (B, r)
+        masks = jnp.concatenate(
+            [base[:, None, :], base[:, None, :] ^ eye[None]], axis=1)
+        sids = jnp.repeat(rows, r + 1)
+        return cost_v(sids, masks.reshape(-1, r)).reshape(rows.shape[0], r + 1)
+
+    # ---- init: fill the (K, R) toggle cache, one server at a time ----
+    all_costs = lax.map(lambda s: rows_costs(member_c, s[None])[0],
+                        jnp.arange(k, dtype=i32))                 # (k, r+1)
+    cur0 = all_costs[:, 0]
+    toggle0 = all_costs[:, 1:]
+
+    trace0 = jnp.full(max_moves + 1, jnp.nan, cur0.dtype)
+    trace0 = trace0.at[0].set(jnp.sum(cur0))
+
+    def harmless(new, old):
+        return new <= old + rel_tol * jnp.maximum(old, 1e-9)
+
+    def refresh(member_c, rows, cur, toggle):
+        costs = rows_costs(member_c, rows)                        # (2, r+1)
+        return (cur.at[rows].set(costs[:, 0]),
+                toggle.at[rows].set(costs[:, 1:]))
+
+    def onehot(slots):
+        # slot == r (the out-of-reach sentinel) encodes as the all-zero row
+        return jnp.arange(r)[None, :] == slots[:, None]
+
+    def do_transfer(args, t_dev, t_src, t_dst):
+        member_c, member, assign, key = args
+        mc = member_c.at[t_src, slot_of[t_src, t_dev]].set(False)
+        mc = mc.at[t_dst, slot_of[t_dst, t_dev]].set(True)
+        m2 = member.at[t_src, t_dev].set(False).at[t_dst, t_dev].set(True)
+        a2 = assign.at[t_dev].set(t_dst)
+        return (jnp.asarray(True), jnp.stack([t_src, t_dst]), mc, m2, a2, key)
+
+    def no_exchange(args):
+        member_c, member, assign, key = args
+        return (jnp.asarray(False), jnp.zeros(2, i32), member_c, member,
+                assign, key)
+
+    def do_exchange(args, cur):
+        member_c, member, assign, key = args
+        key, sub = jax.random.split(key)
+        pairs = jax.random.randint(sub, (exchange_samples, 2), 0, n, dtype=i32)
+        dn, dm = pairs[:, 0], pairs[:, 1]
+        si, sj = assign[dn], assign[dm]
+        sl_i_m = slot_of[si, dm]                       # dm's slot at si
+        sl_j_n = slot_of[sj, dn]                       # dn's slot at sj
+        okay = (dn != dm) & (si != sj) & (sl_j_n < r) & (sl_i_m < r)
+        gi = member_c[si] ^ onehot(slot_of[si, dn]) ^ onehot(sl_i_m)
+        gj = member_c[sj] ^ onehot(slot_of[sj, dm]) ^ onehot(sl_j_n)
+        new_costs = cost_v(jnp.concatenate([si, sj]),
+                           jnp.concatenate([gi, gj]))
+        ci, cj = new_costs[:exchange_samples], new_costs[exchange_samples:]
+        old = cur[si] + cur[sj]
+        delta = ci + cj - old
+        perm = okay & (delta < -rel_tol * jnp.maximum(old, 1e-9))
+        if permission == "pareto":
+            perm &= harmless(ci, cur[si]) & harmless(cj, cur[sj])
+        masked = jnp.where(perm, delta, _INF)
+        b = jnp.argmin(masked)
+        applied = jnp.isfinite(masked[b])
+        ri, rj = si[b], sj[b]
+        dnb, dmb = dn[b], dm[b]
+        mc = member_c.at[ri].set(jnp.where(applied, gi[b], member_c[ri]))
+        mc = mc.at[rj].set(jnp.where(applied, gj[b], mc[rj]))
+        m2 = member.at[ri, dnb].set(
+            jnp.where(applied, False, member[ri, dnb]))
+        m2 = m2.at[rj, dnb].set(jnp.where(applied, True, m2[rj, dnb]))
+        m2 = m2.at[rj, dmb].set(jnp.where(applied, False, m2[rj, dmb]))
+        m2 = m2.at[ri, dmb].set(jnp.where(applied, True, m2[ri, dmb]))
+        a2 = assign.at[dnb].set(jnp.where(applied, rj, assign[dnb]))
+        a2 = a2.at[dmb].set(jnp.where(applied, ri, a2[dmb]))
+        return (applied, jnp.stack([ri, rj]), mc, m2, a2, key)
+
+    def body(state):
+        member_c, member, assign, cur, toggle, moves, key, trace, _ = state
+        # -- scan all valid (server, slot) transfer candidates (no solves) --
+        cur_src = cur[assign]                                     # (n,)
+        minus = toggle[assign, slot_of[assign, idx_n]]            # (n,)
+        minus_delta = minus - cur_src
+        dev = reach_idx                                           # (k, r)
+        src = assign[dev]                                         # (k, r)
+        delta = minus_delta[dev] + toggle - cur[:, None]
+        scale = jnp.maximum(cur[:, None] + cur_src[dev], 1e-9)
+        gsize = jnp.sum(member_c, axis=1)
+        valid = (slot_valid & (src != idx_k[:, None])
+                 & (gsize[src] > min_residual))
+        permitted = valid & (delta < -rel_tol * scale)
+        if permission == "pareto":
+            permitted &= (harmless(toggle, cur[:, None])
+                          & harmless(minus, cur_src)[dev])
+        masked = jnp.where(permitted, delta, _INF)
+        best = jnp.min(masked)
+        has_transfer = jnp.isfinite(best)
+        # explicit device-major order key reproduces the dense engine's
+        # argmin tie-breaking (smallest n*K + k among equal deltas)
+        order = dev.astype(i32) * k + idx_k[:, None]
+        tie = jnp.where(masked == best, order, _I32_BIG)
+        p = jnp.argmin(tie)
+        t_dev = dev.reshape(-1)[p]
+        t_dst = (p // r).astype(i32)
+        t_src = assign[t_dev]
+
+        args = (member_c, member, assign, key)
+        if exchange_samples:
+            applied, rows, member_c, member, assign, key = lax.cond(
+                has_transfer,
+                lambda a: do_transfer(a, t_dev, t_src, t_dst),
+                lambda a: do_exchange(a, cur), args)
+        else:
+            applied, rows, member_c, member, assign, key = lax.cond(
+                has_transfer,
+                lambda a: do_transfer(a, t_dev, t_src, t_dst),
+                no_exchange, args)
+        cur, toggle = lax.cond(
+            applied,
+            lambda a: refresh(*a),
+            lambda a: (a[2], a[3]), (member_c, rows, cur, toggle))
+        moves = moves + applied.astype(i32)
+        trace = trace.at[moves].set(
+            jnp.where(applied, jnp.sum(cur), trace[moves]))
+        return (member_c, member, assign, cur, toggle, moves, key, trace,
+                ~applied)
+
+    def cond(state):
+        return (~state[-1]) & (state[5] < max_moves)
+
+    state = (member_c, member, assignment, cur0, toggle0,
+             jnp.asarray(0, i32), key, trace0, jnp.asarray(False))
+    (member_c, member, assignment, cur, toggle, moves, _, trace,
+     _) = lax.while_loop(cond, body, state)
+    return member_c, member, assignment, cur, toggle, moves, trace
+
+
 class FastAssociationEngine:
     """Drop-in fast engine: same semantics as ``AssociationEngine.run_batched``
     (steepest permitted transfer per round, best sampled exchange when no
     transfer is permitted, identical permission rules and tolerances), with
     the whole loop resident on device.
+
+    ``compact`` selects the sweep space: ``True`` runs in per-server
+    compacted (K, R) reachable-slot space, ``False`` in dense (K, N) space,
+    and ``"auto"`` (default) compacts whenever availability is actually
+    sparse (R < N). Both spaces share move selection order, so they land on
+    the same stable point.
 
     Differences from the reference: exchange candidates are drawn with the
     JAX PRNG instead of NumPy's (so exchange *sequences* differ run-to-run
@@ -236,8 +452,9 @@ class FastAssociationEngine:
     def __init__(self, sc: Scenario, *, kind: str = "fast",
                  permission: str = "utilitarian", min_residual_group: int = 2,
                  seed: int = 0, rel_tol: float = 1e-5,
-                 profile: str = "default"):
+                 profile: str = "default", compact: bool | str = "auto"):
         assert permission in ("utilitarian", "pareto"), permission
+        assert compact in (True, False, "auto"), compact
         self.sc = sc
         self.kind = kind
         self.profile = profile
@@ -255,34 +472,160 @@ class FastAssociationEngine:
             np.asarray(sc.lp.lambda_e * cloud_energy(sc.srv)
                        + sc.lp.lambda_t * cloud_delay(sc.srv),
                        dtype=np.float32))
+        self.reach: ReachIndex | None = None
+        try:
+            self.reach = reach_index_map(self.avail)
+        except ValueError:
+            if compact is True:
+                raise
+        if compact == "auto":
+            compact = (self.reach is not None
+                       and self.reach.r_max < sc.n_devices)
+        self.compact = bool(compact)
+        if self.compact:
+            rows = jnp.arange(sc.n_servers)[:, None]
+            ridx = jnp.asarray(self.reach.idx)
+            # pre-gather every per-device quantity into (K, R) slot space;
+            # scalar-per-server leaves (w, cloud consts) pass through
+            self._consts_c = jax.tree.map(
+                lambda x: x[rows, ridx] if x.ndim == 2 else x,
+                self.solver.consts)
+            self._random_f_c = self.solver.random_f[ridx]
+            self._inv_dist_c = self.solver.inv_dist[rows, ridx]
+            self._reach_idx = ridx
+            self._slot_valid = jnp.asarray(self.reach.valid)
+            self._slot_of = jnp.asarray(self.reach.slot)
         self.last_state: dict | None = None   # debug: cur/toggle cache dump
+        self.last_tier_moves: list[int] | None = None
 
     def initial_assignment(self, init: str = "nearest") -> np.ndarray:
         return initial_assignment(self.sc, self.avail, self.rng, init)
+
+    def evaluate_assignment(self, assignment: np.ndarray) -> float:
+        """Reference-accuracy total system cost of an explicit assignment —
+        the same evaluation ``_finalize`` applies to a run's stable point, so
+        costs from different screening profiles (or no run at all) compare on
+        one scale."""
+        assignment = np.asarray(assignment)
+        n, k = self.sc.n_devices, self.sc.n_servers
+        member = np.zeros((k, n), dtype=bool)
+        member[assignment, np.arange(n)] = True
+        sols = self._eval_solver.solve_batch(np.arange(k), member)
+        return float(np.sum(np.asarray(sols.cost)
+                            + np.where(member.any(axis=1),
+                                       np.asarray(self.cloud_const), 0.0)))
 
     def run(self, init: str = "nearest", *, max_moves: int = 10_000,
             exchange_samples: int = 64,
             assignment: np.ndarray | None = None) -> AssociationResult:
         assignment = (self.initial_assignment(init) if assignment is None
                       else np.asarray(assignment))
+        assignment, member, moves, trace = self._sweep(
+            assignment, self.profile, max_moves, exchange_samples,
+            jax.random.PRNGKey(self.seed))
+        return self._finalize(assignment, member, moves, trace)
+
+    def run_tiered(self, init: str = "nearest", *,
+                   tiers: str | tuple[str, ...] = "two_tier",
+                   max_moves: int = 10_000, exchange_samples: int = 64,
+                   tier_rel_tols: tuple[float, ...] | None = None,
+                   assignment: np.ndarray | None = None) -> AssociationResult:
+        """Two-tier (or n-tier) descent: drive each profile of ``tiers`` to
+        its stable point, warm-starting from the previous tier's assignment.
+
+        ``tiers`` is a :data:`repro.core.resource_allocation.TIER_PLANS` plan
+        name or an explicit profile tuple; the engine's own ``profile`` is
+        ignored by this driver. Coarse tiers apply the bulk of the moves at a
+        fraction of default-accuracy sweep cost, and the final tier's polish
+        recovers the reference-accuracy stable point. ``tier_rel_tols``
+        optionally sets a per-tier stop tolerance (same length as the
+        resolved plan): a looser leading tolerance stops the cheap tier at
+        *near*-stability and leaves the long tail of sub-threshold moves to
+        the tolerance the final tier declares stability at. The stop
+        tolerance is a traced argument, so varying it never recompiles. The
+        returned trace concatenates all tiers (each tier re-evaluates its
+        warm start at its own accuracy, so seams may step, but every tier is
+        monotone).
+        """
+        profiles = ra.resolve_tiers(tiers)
+        rel_tols = (tuple(tier_rel_tols) if tier_rel_tols is not None
+                    else (self.rel_tol,) * len(profiles))
+        if len(rel_tols) != len(profiles):
+            raise ValueError(
+                f"tier_rel_tols has {len(rel_tols)} entries for "
+                f"{len(profiles)} tiers")
+        assignment = (self.initial_assignment(init) if assignment is None
+                      else np.asarray(assignment))
+        base_key = jax.random.PRNGKey(self.seed)
+        total_moves = 0
+        trace: list[float] = []
+        tier_moves: list[int] = []
+        member = None
+        for i, (prof, tol) in enumerate(zip(profiles, rel_tols)):
+            assignment, member, moves, tr = self._sweep(
+                assignment, prof, max_moves, exchange_samples,
+                jax.random.fold_in(base_key, i), rel_tol=tol)
+            total_moves += moves
+            tier_moves.append(moves)
+            trace.extend(tr)
+        self.last_tier_moves = tier_moves
+        return self._finalize(assignment, member, total_moves, trace)
+
+    def _sweep(self, assignment: np.ndarray, profile: str, max_moves: int,
+               exchange_samples: int, key, rel_tol: float | None = None):
+        """One profile's adjustment loop; returns (assignment, dense member,
+        n_moves, trace) and stashes the cache dump in ``last_state``."""
+        rel_tol = self.rel_tol if rel_tol is None else rel_tol
+        assignment = np.asarray(assignment)
         n, k = self.sc.n_devices, self.sc.n_servers
         member0 = np.zeros((k, n), dtype=bool)
         member0[assignment, np.arange(n)] = True
-        member, assign, cur, toggle, moves, trace = _run_device(
-            jnp.asarray(member0), jnp.asarray(assignment, jnp.int32),
-            jax.random.PRNGKey(self.seed), self.solver.consts,
-            self.solver.random_f, self.solver.inv_dist,
-            jnp.asarray(self.avail), self.cloud_const,
-            jnp.float32(self.rel_tol), kind=self.kind, profile=self.profile,
-            permission=self.permission, min_residual=self.min_residual,
-            max_moves=max_moves, exchange_samples=exchange_samples)
+        if self.compact:
+            # an out-of-reach assignment has no slot in compacted space: the
+            # device would silently vanish from its group and the sweep's
+            # slot_of gather would clamp to an unrelated device's toggle
+            # cost, so reject it loudly (the dense path merely prices the
+            # unreachable placement like the reference engine does)
+            unreachable = ~self.avail[assignment, np.arange(n)]
+            if unreachable.any():
+                bad = np.flatnonzero(unreachable)[:8]
+                raise ValueError(
+                    "compact sweep requires every device assigned within "
+                    f"reach; devices {bad.tolist()} are not (e.g. device "
+                    f"{bad[0]} -> server {assignment[bad[0]]})")
+            member_c0 = ((assignment[self.reach.idx]
+                          == np.arange(k)[:, None]) & self.reach.valid)
+            member_c, member, assign, cur, toggle, moves, trace = \
+                _run_device_compact(
+                    jnp.asarray(member_c0), jnp.asarray(member0),
+                    jnp.asarray(assignment, jnp.int32), key,
+                    self._consts_c, self._random_f_c, self._inv_dist_c,
+                    self._reach_idx, self._slot_valid, self._slot_of,
+                    self.cloud_const, jnp.float32(rel_tol),
+                    kind=self.kind, profile=profile,
+                    permission=self.permission,
+                    min_residual=self.min_residual, max_moves=max_moves,
+                    exchange_samples=exchange_samples)
+            self.last_state = {"member": np.asarray(member),
+                               "member_compact": np.asarray(member_c),
+                               "cur_cost": np.asarray(cur),
+                               "toggle_cost_compact": np.asarray(toggle),
+                               "reach": self.reach}
+        else:
+            member, assign, cur, toggle, moves, trace = _run_device(
+                jnp.asarray(member0), jnp.asarray(assignment, jnp.int32),
+                key, self.solver.consts, self.solver.random_f,
+                self.solver.inv_dist, jnp.asarray(self.avail),
+                self.cloud_const, jnp.float32(rel_tol), kind=self.kind,
+                profile=profile, permission=self.permission,
+                min_residual=self.min_residual, max_moves=max_moves,
+                exchange_samples=exchange_samples)
+            self.last_state = {"member": np.asarray(member),
+                               "cur_cost": np.asarray(cur),
+                               "toggle_cost": np.asarray(toggle)}
         moves = int(moves)
-        self.last_state = {"member": np.asarray(member),
-                           "cur_cost": np.asarray(cur),
-                           "toggle_cost": np.asarray(toggle)}
         trace = [float(x) for x in np.asarray(trace[:moves + 1], np.float64)]
-        return self._finalize(np.asarray(assign, np.int64), member,
-                              moves, trace)
+        return np.asarray(assign, np.int64), member, moves, trace
 
     def _finalize(self, assignment, member, moves, trace) -> AssociationResult:
         k = self.sc.n_servers

@@ -489,7 +489,8 @@ class AssociationEngine:
 
 def evaluate_scheme(sc: Scenario, scheme: str, *, seed: int = 0,
                     batched: bool = True, engine: str = "fast",
-                    profile: str = "default") -> AssociationResult:
+                    profile: str = "default", tiers=None,
+                    compact: bool | str = "auto") -> AssociationResult:
     """Run one of the paper's §V.A comparison schemes end-to-end.
 
       hfel           — edge association + full joint RA (the paper's algorithm)
@@ -505,6 +506,14 @@ def evaluate_scheme(sc: Scenario, scheme: str, *, seed: int = 0,
       batched  — host-loop steepest descent (AssociationEngine.run_batched)
       loop     — faithful Algorithm 3 (AssociationEngine.run)
     ``batched=False`` is a legacy alias for ``engine="loop"``.
+
+    Fast-engine options: ``compact`` picks the sweep space (dense (K, N) vs
+    compacted reachable-slot (K, R); "auto" compacts when availability is
+    sparse), and ``tiers`` — a ``ra.TIER_PLANS`` plan name or profile tuple —
+    switches to the multi-tier warm-started descent driver
+    (:meth:`~repro.core.assoc_fast.FastAssociationEngine.run_tiered`), in
+    which case ``profile`` only sets the engine default and the tier plan
+    governs the sweeps.
     """
     kind = {"hfel": "fast", "random": "fast", "greedy": "fast",
             "comp_opt": "comp_only", "comm_opt": "comm_only",
@@ -521,8 +530,13 @@ def evaluate_scheme(sc: Scenario, scheme: str, *, seed: int = 0,
         engine = "loop"
     if engine == "fast":
         from repro.core.assoc_fast import FastAssociationEngine
-        return FastAssociationEngine(sc, kind=kind, seed=seed,
-                                     profile=profile).run(init)
+        eng = FastAssociationEngine(sc, kind=kind, seed=seed,
+                                    profile=profile, compact=compact)
+        if tiers is not None:
+            return eng.run_tiered(init, tiers=tiers)
+        return eng.run(init)
+    if tiers is not None:
+        raise ValueError("tiered descent requires engine='fast'")
     eng = AssociationEngine(sc, kind=kind, seed=seed)
     if engine == "batched":
         return eng.run_batched(init)

@@ -215,6 +215,38 @@ SCREEN_PROFILES: dict[str, dict[str, int]] = {
     "coarse": dict(n_golden=16, n_inner=6, n_bracket=24),
 }
 
+# Named multi-tier descent plans for the association engines: each entry is a
+# sequence of SCREEN_PROFILES names run back-to-back, every tier warm-started
+# from the previous tier's stable assignment. The cheap leading tiers apply
+# the bulk of the adjustments; the trailing "default" tier polishes the
+# stable point back to reference accuracy at a few moves' cost.
+TIER_PLANS: dict[str, tuple[str, ...]] = {
+    "default_only": ("default",),
+    "two_tier": ("coarse", "default"),
+    "three_tier": ("coarse", "screen", "default"),
+}
+
+
+def resolve_tiers(tiers) -> tuple[str, ...]:
+    """Normalize a tier spec into a tuple of screening-profile names.
+
+    Accepts a :data:`TIER_PLANS` plan name, a single profile name, or an
+    iterable of profile names; every resolved profile must exist in
+    :data:`SCREEN_PROFILES`.
+    """
+    if isinstance(tiers, str):
+        tiers = TIER_PLANS.get(tiers, (tiers,))
+    tiers = tuple(tiers)
+    if not tiers:
+        raise ValueError("tier plan resolves to no profiles")
+    unknown = [t for t in tiers if t not in SCREEN_PROFILES]
+    if unknown:
+        raise ValueError(
+            f"unknown screening profile(s) {unknown}; expected names from "
+            f"SCREEN_PROFILES {sorted(SCREEN_PROFILES)} or a TIER_PLANS "
+            f"plan {sorted(TIER_PLANS)}")
+    return tiers
+
 
 @partial(jax.jit, static_argnames=("n_golden", "n_inner", "n_bracket"))
 def solve_fixed_point(c: RAConstants, mask: jnp.ndarray, *, n_golden: int = 48,

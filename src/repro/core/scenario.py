@@ -24,6 +24,56 @@ import numpy as np
 from repro.core.cost_model import DeviceParams, LearningParams, ServerParams
 
 
+@dataclass(frozen=True)
+class ReachIndex:
+    """Static per-server compaction maps of a (K, N) availability matrix.
+
+    ``idx[k, r]`` is the device index occupying reachable slot ``r`` of
+    server ``k`` (devices in ascending order, padded with 0 past the server's
+    reach count); ``valid[k, r]`` marks real slots; ``slot[k, n]`` inverts the
+    map (slot of device ``n`` at server ``k``, or ``r_max`` when ``n`` is out
+    of reach — a deliberate out-of-range sentinel so one-hot encodings of an
+    invalid slot are all-zero). ``r_max`` is the widest reach count, i.e. the
+    compacted buffer width shared by all servers.
+    """
+
+    idx: np.ndarray        # (K, R) int32
+    valid: np.ndarray      # (K, R) bool
+    slot: np.ndarray       # (K, N) int32, r_max == "unreachable"
+    r_max: int
+
+    @property
+    def density(self) -> float:
+        return float(self.valid.mean())
+
+
+def reach_index_map(avail: np.ndarray) -> ReachIndex:
+    """Compute the compacted reachable-set index maps of ``avail`` (K, N).
+
+    The fused candidate sweeps in :mod:`repro.core.assoc_fast` run in this
+    compacted (K, R) slot space: with sparse availability R << N, so both the
+    number of candidate groups per refresh and the vector width of every
+    group solve shrink by the reach density. Every server must reach at least
+    one device only if it is ever used; zero-reach *devices* are rejected
+    because they cannot be associated anywhere (constraint 17e).
+    """
+    avail = np.asarray(avail, dtype=bool)
+    if not avail.any(axis=0).all():
+        raise ValueError("every device must reach at least one server")
+    k, n = avail.shape
+    counts = avail.sum(axis=1)
+    r_max = int(counts.max()) if k else 0
+    idx = np.zeros((k, r_max), dtype=np.int32)
+    valid = np.zeros((k, r_max), dtype=bool)
+    slot = np.full((k, n), r_max, dtype=np.int32)
+    for srv in range(k):
+        reach = np.flatnonzero(avail[srv])
+        idx[srv, :reach.size] = reach
+        valid[srv, :reach.size] = True
+        slot[srv, reach] = np.arange(reach.size, dtype=np.int32)
+    return ReachIndex(idx=idx, valid=valid, slot=slot, r_max=r_max)
+
+
 @dataclass
 class Scenario:
     dev: DeviceParams

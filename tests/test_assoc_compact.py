@@ -1,0 +1,228 @@
+"""Compacted reachable-slot sweep engine: parity with the dense fast engine,
+exchange handling, cache consistency, and the two-tier descent driver."""
+
+import numpy as np
+import pytest
+
+from repro.core import make_scenario
+from repro.core import resource_allocation as ra
+from repro.core.assoc_fast import FastAssociationEngine
+from repro.core.scenario import make_large_scenario, reach_index_map
+
+PARITY_CASES = [(14, 3, 0), (18, 4, 1), (16, 4, 2)]
+
+
+@pytest.mark.parametrize("n,k,seed", PARITY_CASES)
+def test_compact_parity_dense_avail(n, k, seed):
+    """On fully dense availability (R == N) the compacted sweep must be a
+    pure re-indexing of the dense one: same stable assignment, same cost."""
+    sc = make_scenario(n, k, seed=seed)
+    dense = FastAssociationEngine(sc, kind="fast", seed=0, compact=False).run(
+        "nearest", exchange_samples=0)
+    comp = FastAssociationEngine(sc, kind="fast", seed=0, compact=True).run(
+        "nearest", exchange_samples=0)
+    assert abs(comp.total_cost - dense.total_cost) <= 1e-4 * dense.total_cost
+    assert np.array_equal(comp.assignment, dense.assignment)
+
+
+@pytest.mark.parametrize("n,k,seed", PARITY_CASES)
+def test_compact_parity_sparse_avail(n, k, seed):
+    """Restricted reach (the regime compaction targets): same stable point
+    as the dense fast engine, deterministic transfers only."""
+    sc = make_scenario(n, k, seed=seed, reach_m=300.0)
+    dense = FastAssociationEngine(sc, kind="fast", seed=0, compact=False).run(
+        "nearest", exchange_samples=0)
+    comp = FastAssociationEngine(sc, kind="fast", seed=0, compact=True).run(
+        "nearest", exchange_samples=0)
+    assert abs(comp.total_cost - dense.total_cost) <= 1e-4 * dense.total_cost
+    assert np.array_equal(comp.assignment, dense.assignment)
+    assert comp.n_adjustments == dense.n_adjustments
+
+
+def test_compact_pareto_permission_parity():
+    """Pareto permission rule must gate identically in compacted space."""
+    sc = make_scenario(12, 3, seed=7, reach_m=300.0)
+    for permission in ("utilitarian", "pareto"):
+        dense = FastAssociationEngine(
+            sc, kind="fast", permission=permission, seed=0,
+            compact=False).run("nearest", exchange_samples=0)
+        comp = FastAssociationEngine(
+            sc, kind="fast", permission=permission, seed=0,
+            compact=True).run("nearest", exchange_samples=0)
+        assert comp.n_adjustments == dense.n_adjustments, permission
+        assert np.array_equal(comp.assignment, dense.assignment), permission
+
+
+def test_compact_auto_selection():
+    dense_sc = make_scenario(12, 3, seed=0)            # everything reachable
+    sparse_sc = make_scenario(16, 4, seed=1, reach_m=300.0)
+    assert not FastAssociationEngine(dense_sc, kind="fast", seed=0).compact
+    assert FastAssociationEngine(sparse_sc, kind="fast", seed=0).compact
+
+
+def test_compact_exchanges_applied_and_improve():
+    """Exchange moves must be exercised in compacted space: from the
+    transfers-only stable point no transfer is permitted, so any further
+    improvement can only come from an applied exchange (seed chosen so one
+    fires)."""
+    sc = make_scenario(16, 4, seed=1, reach_m=300.0)
+    no_ex = FastAssociationEngine(sc, kind="fast", seed=0, compact=True).run(
+        "nearest", exchange_samples=0)
+    ex = FastAssociationEngine(sc, kind="fast", seed=0, compact=True).run(
+        "nearest", exchange_samples=64)
+    assert ex.total_cost < no_ex.total_cost * (1 - 1e-5)
+    assert ex.n_adjustments > no_ex.n_adjustments
+    avail = np.asarray(sc.avail)
+    for dev, srv in enumerate(ex.assignment):
+        assert avail[srv, dev]
+
+
+def test_compact_toggle_cache_matches_uncached_solves():
+    """The compacted toggle cache must agree with from-scratch dense-mask
+    group solves on every VALID slot (padded slots carry garbage by design
+    and must stay excluded)."""
+    sc = make_scenario(16, 4, seed=2, reach_m=300.0)
+    eng = FastAssociationEngine(sc, kind="fast", seed=0, compact=True)
+    eng.run("nearest", exchange_samples=0)
+    st = eng.last_state
+    reach = st["reach"]
+    member = st["member"]
+    cloud = np.asarray(eng.cloud_const)
+
+    def fresh_cost(server, mask):
+        sol = eng.solver.solve_batch(np.array([server]), mask[None, :])
+        base = float(np.asarray(sol.cost)[0])
+        return base + (cloud[server] if mask.any() else 0.0)
+
+    k = sc.n_servers
+    for s in range(k):
+        # compacted membership mirrors the dense mask row
+        np.testing.assert_array_equal(
+            st["member_compact"][s, reach.valid[s]],
+            member[s, reach.idx[s, reach.valid[s]]])
+        assert fresh_cost(s, member[s]) == pytest.approx(
+            float(st["cur_cost"][s]), rel=1e-5, abs=1e-6)
+    rng = np.random.default_rng(0)
+    for _ in range(8):
+        s = int(rng.integers(0, k))
+        slots = np.flatnonzero(reach.valid[s])
+        r = int(rng.choice(slots))
+        toggled = member[s].copy()
+        d = reach.idx[s, r]
+        toggled[d] = ~toggled[d]
+        assert fresh_cost(s, toggled) == pytest.approx(
+            float(st["toggle_cost_compact"][s, r]), rel=1e-5, abs=1e-6)
+
+
+def test_compact_stability_and_monotone_trace():
+    sc = make_scenario(18, 4, seed=0, reach_m=300.0)
+    eng = FastAssociationEngine(sc, kind="fast", seed=0, compact=True)
+    res = eng.run("random")
+    trace = np.asarray(res.cost_trace)
+    assert np.all(np.diff(trace) <= 1e-6 * trace[:-1]), "cost must decrease"
+    res2 = FastAssociationEngine(sc, kind="fast", seed=0, compact=True).run(
+        assignment=res.assignment)
+    assert res2.n_adjustments == 0
+
+
+def test_compact_scheme_kinds():
+    sc = make_scenario(12, 3, seed=6, reach_m=300.0)
+    for kind in ("comp_only", "uniform", "proportional"):
+        res = FastAssociationEngine(sc, kind=kind, seed=0, compact=True).run(
+            "nearest", exchange_samples=8)
+        assert np.isfinite(res.total_cost) and res.total_cost > 0
+
+
+def test_compact_rejects_unreachable_device():
+    sc = make_scenario(10, 3, seed=0)
+    sc.avail[:, 0] = False
+    with pytest.raises(ValueError):
+        FastAssociationEngine(sc, kind="fast", seed=0, compact=True)
+    # auto mode falls back to the dense path instead of failing
+    eng = FastAssociationEngine(sc, kind="fast", seed=0, compact="auto")
+    assert not eng.compact
+
+
+def test_compact_rejects_out_of_reach_assignment():
+    """A caller-supplied assignment that violates reach has no slot in
+    compacted space and would silently corrupt the sweep — must raise."""
+    sc = make_scenario(16, 4, seed=2, reach_m=300.0)
+    avail = np.asarray(sc.avail)
+    dev = int(np.argmin(avail.sum(axis=0)))     # device with restricted reach
+    srv = int(np.flatnonzero(~avail[:, dev])[0])
+    eng = FastAssociationEngine(sc, kind="fast", seed=0, compact=True)
+    bad = eng.initial_assignment("nearest")
+    bad[dev] = srv
+    with pytest.raises(ValueError, match="within\\s+reach"):
+        eng.run(assignment=bad, exchange_samples=0)
+    with pytest.raises(ValueError, match="within\\s+reach"):
+        eng.run_tiered(assignment=bad, exchange_samples=0)
+
+
+def test_evaluate_assignment_matches_finalize():
+    """evaluate_assignment must reproduce the reference-accuracy total_cost
+    _finalize reports for the same assignment."""
+    sc = make_scenario(14, 3, seed=0, reach_m=300.0)
+    eng = FastAssociationEngine(sc, kind="fast", seed=0, profile="coarse")
+    res = eng.run("nearest", exchange_samples=0)
+    ev = eng.evaluate_assignment(res.assignment)
+    assert abs(ev - res.total_cost) <= 1e-5 * res.total_cost
+
+
+# ---------------------------------------------------------------------------
+# Two-tier descent
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,k,seed", PARITY_CASES)
+def test_two_tier_matches_default_only(n, k, seed):
+    """Deterministic two-tier gate: coarse sweep + default polish must land
+    within 1e-3 relative cost of a pure default-profile run."""
+    sc = make_scenario(n, k, seed=seed)
+    full = FastAssociationEngine(sc, kind="fast", seed=0).run(
+        "nearest", exchange_samples=0)
+    eng = FastAssociationEngine(sc, kind="fast", seed=0)
+    tiered = eng.run_tiered("nearest", exchange_samples=0)
+    assert abs(tiered.total_cost - full.total_cost) <= 1e-3 * full.total_cost
+    assert len(eng.last_tier_moves) == 2
+    assert tiered.n_adjustments == sum(eng.last_tier_moves)
+
+
+def test_two_tier_from_stable_point_is_noop():
+    sc = make_scenario(14, 3, seed=0)
+    full = FastAssociationEngine(sc, kind="fast", seed=0).run(
+        "nearest", exchange_samples=0)
+    eng = FastAssociationEngine(sc, kind="fast", seed=0)
+    tiered = eng.run_tiered(assignment=full.assignment, exchange_samples=0)
+    assert eng.last_tier_moves[-1] == 0
+    assert abs(tiered.total_cost - full.total_cost) <= 1e-5 * full.total_cost
+
+
+def test_two_tier_compact_sparse():
+    sc = make_scenario(18, 4, seed=1, reach_m=300.0)
+    full = FastAssociationEngine(sc, kind="fast", seed=0, compact=True).run(
+        "nearest", exchange_samples=0)
+    tiered = FastAssociationEngine(
+        sc, kind="fast", seed=0, compact=True).run_tiered(
+        "nearest", exchange_samples=0)
+    assert abs(tiered.total_cost - full.total_cost) <= 1e-3 * full.total_cost
+
+
+def test_resolve_tiers():
+    assert ra.resolve_tiers("two_tier") == ("coarse", "default")
+    assert ra.resolve_tiers("default_only") == ("default",)
+    assert ra.resolve_tiers("coarse") == ("coarse",)
+    assert ra.resolve_tiers(("screen", "default")) == ("screen", "default")
+    with pytest.raises(ValueError):
+        ra.resolve_tiers("nope")
+    with pytest.raises(ValueError):
+        ra.resolve_tiers(())
+
+
+def test_evaluate_scheme_tiered_dispatch():
+    from repro.core.edge_association import evaluate_scheme
+    sc = make_scenario(12, 3, seed=1, reach_m=300.0)
+    res = evaluate_scheme(sc, "hfel", seed=0, tiers="two_tier")
+    assert np.isfinite(res.total_cost) and res.total_cost > 0
+    with pytest.raises(ValueError):
+        evaluate_scheme(sc, "hfel", seed=0, engine="batched",
+                        tiers="two_tier")
