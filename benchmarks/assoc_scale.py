@@ -6,9 +6,11 @@ Sections:
   * head-to-head at the paper's N=60/K=5 operating point — cold (includes
     jit compile) and warm wall-clock, plus the stable-point parity gap on a
     deterministic (exchange_samples=0) run;
-  * compaction: per-move refresh cost of the dense (K, N) sweep vs the
-    compacted (K, R) reachable-slot sweep at N=1000/K=20 (the PR 2 headline
-    ratio; the per-move figure subtracts a max_moves=0 init-only run from a
+  * compaction: per-move refresh cost of the dense (K, N) sweep vs the flat
+    compacted (K, R) sweep vs the bucketed per-(K_b, R_b) adaptive-width
+    sweep at N=1000/K=20 — all three are configurations of the ONE unified
+    move-selection kernel — plus the padded-slot fraction each compaction
+    wastes (the per-move figure subtracts a max_moves=0 init-only run from a
     bounded-move run, so jit-compile noise mostly cancels);
   * two-tier descent: coarse-to-stability + default polish vs a pure
     default-profile run at N=250/K=10 (cost parity at lower wall time);
@@ -92,19 +94,32 @@ def _head_to_head_n60(report, timings, quick):
 
 
 def _compaction(report, timings, n, k, max_moves):
-    """Per-move refresh cost, dense (K, N) vs compacted (K, R) sweep.
+    """Per-move refresh cost: dense (K, N) vs flat compacted (K, R) vs
+    bucketed per-(K_b, R_b) sweeps of the one unified kernel.
 
     Each engine runs twice cold: an init-only (max_moves=0) fill and a
     bounded-move run; the difference divided by applied moves isolates the
     per-move refresh. The two programs share their loop-body HLO, so compile
-    time largely cancels in the subtraction.
+    time largely cancels in the subtraction. The padded-slot fraction is the
+    share of compacted slots that are pure padding — the wasted sweep work
+    adaptive bucket widths exist to cut.
     """
     sc = make_large_scenario(n, k, seed=0)
-    r_max = reach_index_map(sc.avail).r_max
+    flat_reach = reach_index_map(sc.avail)
+    bucketed_reach = reach_index_map(sc.avail, bucketed=True)
+    r_max = flat_reach.r_max
     tag = f"N{n}_K{k}"
     report(f"assoc_scale/compaction/{tag}_r_max", None, r_max)
-    out = {"r_max": r_max, "density": float(np.asarray(sc.avail).mean())}
-    for compact, label in ((False, "dense"), (True, "compact")):
+    report(f"assoc_scale/compaction/{tag}_padded_frac_flat", None,
+           round(flat_reach.padded_fraction, 3))
+    report(f"assoc_scale/compaction/{tag}_padded_frac_bucketed", None,
+           round(bucketed_reach.padded_fraction, 3))
+    out = {"r_max": r_max, "density": float(np.asarray(sc.avail).mean()),
+           "padded_frac_flat": flat_reach.padded_fraction,
+           "padded_frac_bucketed": bucketed_reach.padded_fraction,
+           "bucket_widths": [b.width for b in bucketed_reach.buckets]}
+    for compact, label in ((False, "dense"), (True, "compact"),
+                           ("bucketed", "bucketed")):
         eng = FastAssociationEngine(sc, kind="fast", seed=0,
                                     profile="coarse", compact=compact)
         t0 = time.time()
@@ -126,6 +141,11 @@ def _compaction(report, timings, n, k, max_moves):
     report(f"assoc_scale/compaction/{tag}_permove_speedup", None,
            round(speedup, 2))
     out["per_move_speedup"] = speedup
+    b_speedup = out["compact"]["per_move_s"] / max(
+        out["bucketed"]["per_move_s"], 1e-9)
+    report(f"assoc_scale/compaction/{tag}_bucketed_vs_flat_permove", None,
+           round(b_speedup, 2))
+    out["bucketed_vs_flat_permove"] = b_speedup
     return out
 
 
@@ -218,8 +238,10 @@ def run(report, quick: bool = False):
         out["parity_rel_gap"] = parity
 
     if quick:
-        # smoke subset: one bounded compacted run on a small large-scenario
-        # point (a single XLA program, so compile cost stays in budget)
+        # smoke subset: one bounded compacted run and one bounded bucketed
+        # run on a small large-scenario point, so the smoke mode exercises
+        # both dispatch paths of the unified kernel (each is a single XLA
+        # program, so compile cost stays in budget)
         sc = make_large_scenario(250, 10, seed=0)
         eng = FastAssociationEngine(sc, kind="fast", seed=0, profile="coarse")
         t0 = time.time()
@@ -228,6 +250,20 @@ def run(report, quick: bool = False):
         timings["quick_compact_n250_k10"] = dt
         report("assoc_scale/quick/N250_K10_s", None, round(dt, 3))
         report("assoc_scale/quick/N250_K10_moves", None, res.n_adjustments)
+        beng = FastAssociationEngine(sc, kind="fast", seed=0,
+                                     profile="coarse", compact="bucketed")
+        t0 = time.time()
+        bres = beng.run("nearest", max_moves=6, exchange_samples=0)
+        dt = time.time() - t0
+        timings["quick_bucketed_n250_k10"] = dt
+        report("assoc_scale/quick/N250_K10_bucketed_s", None, round(dt, 3))
+        report("assoc_scale/quick/N250_K10_bucketed_moves", None,
+               bres.n_adjustments)
+        # hard parity gate: this is the only N=250-scale bucketed-vs-flat
+        # probe (unit tests gate parity at N<=18), so a divergence must fail
+        # the smoke run, not print an informational line
+        assert np.array_equal(res.assignment, bres.assignment), (
+            "bucketed quick point diverged from the flat compact sweep")
     else:
         out["compaction"] = {
             "N1000_K20": _compaction(report, timings, 1000, 20, max_moves=6)}

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
-# Tier-1 verification with a meaningful green/red signal: run the full test
-# suite minus the seed_known_failure set (tests already broken in the seed
-# snapshot — see SEED_KNOWN_FAILURES in tests/conftest.py). Extra pytest
-# arguments pass through, e.g. `scripts/tier1.sh tests/test_assoc_fast.py`.
+# Tier-1 verification: run the FULL test suite. The seed_known_failure set
+# (tests/conftest.py) is empty since PR 3 fixed the 14 seed-snapshot jax
+# incompatibilities, so the marker filter below currently deselects nothing;
+# it stays as plumbing for any future environment-bound straggler. Extra
+# pytest arguments pass through, e.g. `scripts/tier1.sh tests/test_assoc_fast.py`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \

@@ -1,5 +1,5 @@
-"""Device-resident edge association — fused candidate sweeps with an
-incremental toggle-cost delta cache, in dense or compacted slot space.
+"""Device-resident edge association — ONE fused candidate-sweep kernel with
+an incremental toggle-cost delta cache, parameterised by slot-index maps.
 
 This is the performance engine behind Algorithm 3 / ``run_batched``: the whole
 steepest-descent adjustment loop runs inside ONE jitted ``lax.while_loop``
@@ -9,55 +9,66 @@ round-trip regardless of how many adjustments it applies. The reference
 round through Python loops, frozenset-keyed memo dicts, and one
 ``solve_batch`` host->device sync per candidate batch.
 
-Dense design
-------------
-Association state is a ``(K, N)`` boolean membership mask on device. The key
-data structure is the *toggle-cost cache*::
+Unified slot-space design
+-------------------------
+Association state is a dense ``(K, N)`` boolean membership mask plus, per
+*bucket* of servers, a compacted toggle-cost cache::
 
-    toggle[k, n] = group cost of  member[k] XOR {n}
-    cur[k]       = group cost of  member[k]
+    toggle_b[row, r] = group cost of  member[server] XOR {device at slot r}
+    cur[server]      = group cost of  member[server]
 
-Because XOR adds ``n`` when it is absent and removes it when present,
-``toggle`` simultaneously caches every "group k gains device n" candidate
-(for non-members) and every "group k loses device n" candidate (for members)
-— the two halves of any transfer. The delta of moving device ``n`` from its
-server ``s = assign[n]`` to server ``k`` is then pure arithmetic::
+Because XOR adds a device when it is absent and removes it when present,
+``toggle`` simultaneously caches every "group gains device" candidate (for
+non-members) and every "group loses device" candidate (for members) — the
+two halves of any transfer. The delta of moving device ``n`` from its server
+``s = assign[n]`` to server ``k`` is then pure arithmetic::
 
-    delta[k, n] = (toggle[s, n] - cur[s]) + (toggle[k, n] - cur[k])
+    delta = (toggle[s at n's slot] - cur[s]) + (toggle[k at n's slot] - cur[k])
 
-so each steepest-descent round scans ALL N*K candidate transfers with zero
-solver calls, picks the best permitted move via ``lax`` reductions, and only
-then refreshes the cache. A move touches exactly two servers, so the refresh
-is a fused vmapped solve of ``2*(N+1)`` groups (each touched server's current
-mask plus its N single-device toggles). Group costs here always include the
-server's cloud-aggregation constant when the group is non-empty, matching
-``AssociationEngine.group_cost``.
+so each steepest-descent round scans ALL reachable transfer candidates with
+zero solver calls, picks the best permitted move via ``lax`` reductions with
+an explicit device-major tie-break key, and only then refreshes the cache. A
+move touches exactly two servers, so the refresh solves each touched server's
+current group plus its single-slot toggles — ``R_b + 1`` groups of vector
+width ``R_b``, dispatched to the server's bucket with ``lax.switch``.
 
-Compacted reachable-set design (``compact=True``, auto-on for sparse reach)
----------------------------------------------------------------------------
-The dense refresh prices ``2*(N+1)`` candidate groups of vector width N even
-though a server can only ever gain devices it reaches. With the static
-per-server index maps of :func:`repro.core.scenario.reach_index_map`
-(``R`` = max reach count, padded), membership and toggle state live in
-``(K, R)`` *compacted slot space*: RA constants, the fixed random-f draws and
-inverse-distance rows are pre-gathered per server, so the per-move refresh
-solves ``2*(R+1)`` groups of width R — an ``(N/R)^2``-ish cut that is what
-makes full N=2000/K=50 convergence runs tractable (see
-``benchmarks/assoc_scale.py`` for measured ratios). The candidate argmin runs
-in the same compacted space with an explicit device-major tie-break key, so
-move selection matches the dense engine order-for-order; the chosen move is
-scattered back to the dense ``(K, N)`` mask kept alongside (two column
-scatters per move) so finalization and debugging read ordinary dense state.
-Padded slots carry garbage toggle costs by construction and are excluded from
-every candidate mask; they never influence a move.
+There is exactly one move-selection loop body (:func:`_run_device`); the
+historical dense / compacted engines are *configurations* of it:
 
-Sampled *exchanges* (Definition 5) ride the same fused sweep in both spaces:
-when no transfer is permitted, a ``lax.cond`` branch draws candidate device
-pairs with the on-device PRNG, evaluates both swapped groups for every pair
-in one vmapped solve, and applies the best permitted swap followed by the
-same two-row cache refresh. In compacted space the swapped masks are built by
-XOR-ing one-hot slot encodings (an out-of-reach slot encodes as the all-zero
-row, so unavailable swaps are naturally inert and additionally gated).
+* **dense** (``compact=False``): one bucket whose index maps are the
+  identity (``idx[k] = arange(N)``, every slot exists, candidate slots
+  gated by ``avail``). The sweep then runs in the classic (K, N) space.
+* **flat compact** (``compact=True``, auto-on for sparse reach): one bucket
+  built from :func:`repro.core.scenario.reach_index_map` — all servers pad
+  to the global max reach count R, and the per-move refresh solves
+  ``R + 1`` groups of width R, an ``(N/R)^2``-ish cut versus dense that is
+  what makes full N=2000/K=50 convergence runs tractable.
+* **bucketed** (``compact="bucketed"``): adaptive slot widths.
+  ``reach_index_map(avail, bucketed=True)`` groups servers into binary
+  buckets by reach count (the same power-of-two scheme as
+  ``GroupSolver.solve_batch``), each compacted at its own width ``R_b``, so
+  one dense-reach server no longer pads every other server's row. The sweep
+  evaluates one fused candidate scan per bucket and merges the per-bucket
+  argmins with the same global device-major tie-break key, so move selection
+  is order-identical to the flat configurations.
+
+Padded slots carry garbage toggle costs by construction and are excluded
+from every candidate mask; they never influence a move. The dense ``(K, N)``
+mask stays the single source of truth: compacted membership rows are
+gathered from it on demand (``member[servers[row], idx[row]] & exists``), so
+applying a move is two dense column writes — no per-bucket scatter state to
+keep consistent.
+
+Sampled *exchanges* (Definition 5) ride the same fused sweep: when no
+transfer is permitted, a ``lax.cond`` branch draws candidate device pairs
+with the on-device PRNG, evaluates both swapped groups for every pair in ONE
+vmapped solve in a shared all-server slot space (``ex_bucket``, flat width;
+sampled pairs hit arbitrary server pairs, so pricing them once per width
+bucket would multiply the solve work), and applies the best permitted swap
+followed by the same two-row cache refresh in the per-bucket caches.
+Swapped masks are built by XOR-ing one-hot slot encodings — an out-of-reach
+slot encodes as the all-zero row, so unavailable swaps are naturally inert
+and additionally gated.
 
 Two-tier descent (:meth:`FastAssociationEngine.run_tiered`)
 -----------------------------------------------------------
@@ -78,14 +89,16 @@ every §V.A scheme kind works here; ``profile`` selects a
 ("default" reproduces the reference engine bit-for-bit on the solve level,
 "screen"/"coarse" cut sweep cost ~2-4x for large-N scenarios).
 
-Compilation: one XLA program per ``(N or R, K, max_moves, exchange_samples,
-kind, profile, permission, min_residual)``. The jit cache is module-global,
-so repeated engines on same-shaped scenarios reuse the compiled program.
+Compilation: one XLA program per (bucket shape tuple, ``max_moves``,
+``exchange_samples``, ``kind``, ``profile``, ``permission``,
+``min_residual``). The jit cache is module-global, so repeated engines on
+same-shaped scenarios reuse the compiled program.
 """
 
 from __future__ import annotations
 
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -96,35 +109,36 @@ from repro.core import resource_allocation as ra
 from repro.core.cost_model import cloud_delay, cloud_energy, global_cost
 from repro.core.edge_association import (AssociationResult, GroupSolver,
                                          initial_assignment, solve_group)
-from repro.core.scenario import ReachIndex, Scenario, reach_index_map
+from repro.core.scenario import (ReachBuckets, ReachIndex, Scenario,
+                                 reach_index_map)
 
 _INF = jnp.inf
 _I32_BIG = np.iinfo(np.int32).max
 
 
-def _group_cost_fn(kind, profile, consts, random_f, inv_dist, cloud_const):
-    """(server_idx, mask) -> group cost incl. the non-empty cloud constant."""
+class _Bucket(NamedTuple):
+    """One slot-width bucket of the unified sweep: the per-server index maps
+    plus every RA constant pre-gathered into (K_b, R_b) slot space."""
 
-    def cost(server_idx, mask):
-        c = jax.tree.map(lambda x: x[server_idx], consts)
-        sol = solve_group(kind, c, mask, random_f=random_f,
-                          inv_dist_row=inv_dist[server_idx], profile=profile)
-        return sol.cost + jnp.where(jnp.any(mask), cloud_const[server_idx], 0.0)
+    servers: jnp.ndarray    # (K_b,) global server ids
+    idx: jnp.ndarray        # (K_b, R_b) device id per slot
+    exists: jnp.ndarray     # (K_b, R_b) slot holds a real device
+    ok: jnp.ndarray         # (K_b, R_b) slot is a legal transfer target
+    consts: object          # RAConstants, leaves gathered per bucket row
+    random_f: jnp.ndarray   # (K_b, R_b)
+    inv_dist: jnp.ndarray   # (K_b, R_b)
 
-    return cost
 
+def _bucket_cost_fn(kind, profile, bucket, cloud_const):
+    """(bucket_row, slot_mask) -> group cost incl. the non-empty cloud
+    constant of the row's server."""
 
-def _compact_cost_fn(kind, profile, consts_c, random_f_c, inv_dist_c,
-                     cloud_const):
-    """Compacted-space twin of :func:`_group_cost_fn`: ``consts_c`` leaves,
-    ``random_f_c`` and ``inv_dist_c`` are pre-gathered per server at its
-    reachable-device indices, so masks are (R,) slot vectors."""
-
-    def cost(server_idx, mask):
-        c = jax.tree.map(lambda x: x[server_idx], consts_c)
-        sol = solve_group(kind, c, mask, random_f=random_f_c[server_idx],
-                          inv_dist_row=inv_dist_c[server_idx], profile=profile)
-        return sol.cost + jnp.where(jnp.any(mask), cloud_const[server_idx], 0.0)
+    def cost(row, mask):
+        c = jax.tree.map(lambda x: x[row], bucket.consts)
+        sol = solve_group(kind, c, mask, random_f=bucket.random_f[row],
+                          inv_dist_row=bucket.inv_dist[row], profile=profile)
+        return sol.cost + jnp.where(jnp.any(mask),
+                                    cloud_const[bucket.servers[row]], 0.0)
 
     return cost
 
@@ -132,38 +146,65 @@ def _compact_cost_fn(kind, profile, consts_c, random_f_c, inv_dist_c,
 @partial(jax.jit, donate_argnums=(0, 1),
          static_argnames=("kind", "profile", "permission", "min_residual",
                           "max_moves", "exchange_samples"))
-def _run_device(member, assignment, key, consts, random_f, inv_dist, avail,
-                cloud_const, rel_tol, *, kind, profile, permission,
-                min_residual, max_moves, exchange_samples):
-    """The whole adjustment loop as one device program (dense (K, N) space).
+def _run_device(member, assignment, key, buckets, ex_bucket, slot_of,
+                bucket_of, row_of, cloud_const, rel_tol, *, kind, profile,
+                permission, min_residual, max_moves, exchange_samples):
+    """The whole adjustment loop as one device program — the single
+    move-selection kernel behind every sweep space (dense / flat compact /
+    bucketed; see module docstring).
 
-    Returns (member, assignment, cur, toggle, n_moves, trace); ``trace[i]``
+    ``buckets`` is a static-length tuple of :class:`_Bucket`; ``slot_of``
+    (K, N) maps (server, device) to the device's slot in the server's bucket
+    (out-of-range when unreachable), ``bucket_of``/``row_of`` (K,) locate
+    each server's toggle row. ``ex_bucket`` is a single bucket covering ALL
+    K servers (rows = server ids) in which exchange candidates are priced —
+    sampled exchange pairs hit arbitrary server pairs, so evaluating them in
+    one shared slot space avoids solving every pair once per width bucket.
+    Returns (member, assignment, cur, toggles, n_moves, trace); ``trace[i]``
     is the surrogate total after move i (trace[0] = initial total), padded
     with NaN past ``n_moves``.
     """
     k, n = member.shape
-    cost = _group_cost_fn(kind, profile, consts, random_f, inv_dist,
-                          cloud_const)
-    cost_v = jax.vmap(cost)
-    eye = jnp.eye(n, dtype=bool)
-    idx_n = jnp.arange(n)
+    nb = len(buckets)
     i32 = jnp.int32
+    idx_n = jnp.arange(n)
 
-    def rows_costs(member, rows):
-        """Solve each row's current group and all N single-device toggles."""
-        base = member[rows]                                       # (R, n)
+    cost_vs = [jax.vmap(_bucket_cost_fn(kind, profile, bd, cloud_const))
+               for bd in buckets]
+    eyes = [jnp.eye(bd.idx.shape[1], dtype=bool) for bd in buckets]
+    ex_cost_v = jax.vmap(_bucket_cost_fn(kind, profile, ex_bucket,
+                                         cloud_const))
+    r_ex = ex_bucket.idx.shape[1]
+
+    def base_rows(b, member, rows):
+        """Compacted membership of bucket ``b``'s given rows, gathered from
+        the dense mask (padded slots forced False)."""
+        bd = buckets[b]
+        return member[bd.servers[rows][:, None], bd.idx[rows]] & bd.exists[rows]
+
+    def rows_costs(b, member, rows):
+        """Solve each row's current group and all R_b single-slot toggles."""
+        bd = buckets[b]
+        rb = bd.idx.shape[1]
+        base = base_rows(b, member, rows)                      # (m, rb)
         masks = jnp.concatenate(
-            [base[:, None, :], base[:, None, :] ^ eye[None]], axis=1)
-        sids = jnp.repeat(rows, n + 1)
-        return cost_v(sids, masks.reshape(-1, n)).reshape(rows.shape[0], n + 1)
+            [base[:, None, :], base[:, None, :] ^ eyes[b][None]], axis=1)
+        sids = jnp.repeat(rows, rb + 1)
+        return cost_vs[b](sids, masks.reshape(-1, rb)).reshape(
+            rows.shape[0], rb + 1)
 
-    # ---- init: fill the full (K, N) toggle cache, one server at a time ----
-    # (lax.map keeps peak memory at one server's (N+1, N) batch, which is
-    # what allows N=2000-scale scenarios on a single host.)
-    all_costs = lax.map(lambda s: rows_costs(member, s[None])[0],
-                        jnp.arange(k, dtype=i32))                 # (k, n+1)
-    cur0 = all_costs[:, 0]
-    toggle0 = all_costs[:, 1:]
+    # ---- init: fill every bucket's toggle cache, one server at a time ----
+    # (lax.map keeps peak memory at one server's (R_b+1, R_b) batch, which
+    # is what allows N=2000-scale scenarios on a single host.)
+    cur0 = jnp.zeros(k, jnp.float32)
+    toggles0 = []
+    for b, bd in enumerate(buckets):
+        kb = bd.idx.shape[0]
+        costs = lax.map(lambda rw, b=b: rows_costs(b, member, rw[None])[0],
+                        jnp.arange(kb, dtype=i32))             # (kb, rb+1)
+        cur0 = cur0.at[bd.servers].set(costs[:, 0])
+        toggles0.append(costs[:, 1:])
+    toggles0 = tuple(toggles0)
 
     trace0 = jnp.full(max_moves + 1, jnp.nan, cur0.dtype)
     trace0 = trace0.at[0].set(jnp.sum(cur0))
@@ -171,263 +212,163 @@ def _run_device(member, assignment, key, consts, random_f, inv_dist, avail,
     def harmless(new, old):
         return new <= old + rel_tol * jnp.maximum(old, 1e-9)
 
-    def refresh(member, rows, cur, toggle):
-        costs = rows_costs(member, rows)                          # (2, n+1)
-        return (cur.at[rows].set(costs[:, 0]),
-                toggle.at[rows].set(costs[:, 1:]))
+    def removal_toggle(toggles, assign):
+        """Per device: toggle cost of its current server losing it, gathered
+        across buckets (each server's row lives in exactly one)."""
+        sl = slot_of[assign, idx_n]                            # (n,)
+        out = jnp.zeros(n, cur0.dtype)
+        for b, bd in enumerate(buckets):
+            kb, rb = bd.idx.shape
+            v = toggles[b][jnp.clip(row_of[assign], 0, kb - 1),
+                           jnp.clip(sl, 0, rb - 1)]
+            out = jnp.where(bucket_of[assign] == b, v, out)
+        return out
 
-    def do_transfer(args, t_dev, t_src, t_dst):
-        member, assign, key = args
-        m2 = member.at[t_src, t_dev].set(False).at[t_dst, t_dev].set(True)
-        a2 = assign.at[t_dev].set(t_dst)
-        return (jnp.asarray(True), jnp.stack([t_src, t_dst]), m2, a2, key)
+    def can_join(srv, dev):
+        """Availability gate for device(s) joining server(s), elementwise
+        (ex_bucket rows are server ids, so no per-bucket dispatch needed)."""
+        sl = slot_of[srv, dev]
+        return (sl < r_ex) & ex_bucket.ok[srv, jnp.clip(sl, 0, r_ex - 1)]
 
-    def no_exchange(args):
-        member, assign, key = args
-        return (jnp.asarray(False), jnp.zeros(2, i32), member, assign, key)
+    def refresh_server(member, server, applied, cur, toggles):
+        """Refresh one touched server's cur + toggle row in its own bucket
+        via lax.switch (extra branch = no-op when the move wasn't applied)."""
 
-    def do_exchange(args, cur):
-        member, assign, key = args
-        key, sub = jax.random.split(key)
-        pairs = jax.random.randint(sub, (exchange_samples, 2), 0, n, dtype=i32)
-        dn, dm = pairs[:, 0], pairs[:, 1]
-        si, sj = assign[dn], assign[dm]
-        okay = (dn != dm) & (si != sj) & avail[sj, dn] & avail[si, dm]
-        both = eye[dn] | eye[dm]                                  # (E, n)
-        gi = member[si] ^ both
-        gj = member[sj] ^ both
-        new_costs = cost_v(jnp.concatenate([si, sj]),
-                           jnp.concatenate([gi, gj]))
-        ci, cj = new_costs[:exchange_samples], new_costs[exchange_samples:]
-        old = cur[si] + cur[sj]
-        delta = ci + cj - old
-        perm = okay & (delta < -rel_tol * jnp.maximum(old, 1e-9))
-        if permission == "pareto":
-            perm &= harmless(ci, cur[si]) & harmless(cj, cur[sj])
-        masked = jnp.where(perm, delta, _INF)
-        b = jnp.argmin(masked)
-        applied = jnp.isfinite(masked[b])
-        ri, rj = si[b], sj[b]
-        m2 = member.at[ri].set(jnp.where(applied, gi[b], member[ri]))
-        m2 = m2.at[rj].set(jnp.where(applied, gj[b], m2[rj]))
-        a2 = assign.at[dn[b]].set(jnp.where(applied, sj[b], assign[dn[b]]))
-        a2 = a2.at[dm[b]].set(jnp.where(applied, si[b], a2[dm[b]]))
-        return (applied, jnp.stack([ri, rj]), m2, a2, key)
+        def branch(b):
+            def go(ops):
+                cur, toggles = ops
+                row = row_of[server]
+                costs = rows_costs(b, member, row[None])       # (1, rb+1)
+                return (cur.at[server].set(costs[0, 0]),
+                        tuple(t.at[row].set(costs[0, 1:]) if i == b else t
+                              for i, t in enumerate(toggles)))
+            return go
+
+        return lax.switch(jnp.where(applied, bucket_of[server], nb),
+                          [branch(b) for b in range(nb)] + [lambda ops: ops],
+                          (cur, toggles))
 
     def body(state):
-        member, assign, cur, toggle, moves, key, trace, _ = state
-        # -- scan all N*K transfer candidates from the cache (no solves) --
-        cur_src = cur[assign]                                     # (n,)
-        minus = toggle[assign, idx_n]                             # (n,)
-        delta = (minus - cur_src)[None, :] + toggle - cur[:, None]
-        scale = jnp.maximum(cur[:, None] + cur_src[None, :], 1e-9)
-        gsize = jnp.sum(member, axis=1)
-        valid = (avail & (jnp.arange(k, dtype=i32)[:, None] != assign[None, :])
-                 & (gsize[assign] > min_residual)[None, :])
-        permitted = valid & (delta < -rel_tol * scale)
+        member, assign, cur, toggles, moves, key, trace, _ = state
+        # -- scan all reachable transfer candidates from the cache (no
+        #    solves), one fused scan per bucket, argmins merged globally --
+        cur_src = cur[assign]                                  # (n,)
+        minus = removal_toggle(toggles, assign)                # (n,)
+        minus_delta = minus - cur_src
+        gsize = jnp.sum(member, axis=1)                        # (k,)
         if permission == "pareto":
-            permitted &= (harmless(toggle, cur[:, None])
-                          & harmless(minus, cur_src)[None, :])
-        # device-major flattening matches the reference engine's candidate
-        # iteration order, so argmin tie-breaking is move-for-move identical
-        flat = jnp.where(permitted, delta, _INF).T.reshape(-1)
-        t_idx = jnp.argmin(flat)
-        has_transfer = jnp.isfinite(flat[t_idx])
-        t_dev = (t_idx // k).astype(i32)
-        t_dst = (t_idx % k).astype(i32)
+            src_harmless = harmless(minus, cur_src)            # (n,)
+
+        best_delta = jnp.asarray(_INF, cur0.dtype)
+        best_order = jnp.asarray(_I32_BIG, i32)
+        t_dev = jnp.asarray(0, i32)
+        t_dst = jnp.asarray(0, i32)
+        for b, bd in enumerate(buckets):
+            rb = bd.idx.shape[1]
+            dev = bd.idx                                       # (kb, rb)
+            cur_b = cur[bd.servers][:, None]                   # (kb, 1)
+            src = assign[dev]                                  # (kb, rb)
+            delta = minus_delta[dev] + toggles[b] - cur_b
+            scale = jnp.maximum(cur_b + cur_src[dev], 1e-9)
+            valid = (bd.ok & (src != bd.servers[:, None])
+                     & (gsize[src] > min_residual))
+            permitted = valid & (delta < -rel_tol * scale)
+            if permission == "pareto":
+                permitted &= harmless(toggles[b], cur_b) & src_harmless[dev]
+            masked = jnp.where(permitted, delta, _INF)
+            bucket_best = jnp.min(masked)
+            # explicit device-major order key reproduces the host reference
+            # engine's argmin tie-breaking (smallest n*K + k among equal
+            # deltas) — globally, across buckets
+            order = dev.astype(i32) * k + bd.servers[:, None].astype(i32)
+            tie = jnp.where(masked == bucket_best, order, _I32_BIG)
+            p = jnp.argmin(tie)
+            b_order = tie.reshape(-1)[p]
+            take = ((bucket_best < best_delta)
+                    | ((bucket_best == best_delta) & (b_order < best_order)))
+            best_delta = jnp.where(take, bucket_best, best_delta)
+            best_order = jnp.where(take, b_order, best_order)
+            t_dev = jnp.where(take, dev.reshape(-1)[p], t_dev)
+            t_dst = jnp.where(take, bd.servers[p // rb], t_dst)
+        has_transfer = jnp.isfinite(best_delta)
         t_src = assign[t_dev]
+
+        def do_transfer(args):
+            member, assign, key = args
+            m2 = member.at[t_src, t_dev].set(False).at[t_dst, t_dev].set(True)
+            a2 = assign.at[t_dev].set(t_dst)
+            return (jnp.asarray(True), jnp.stack([t_src, t_dst]), m2, a2, key)
+
+        def no_exchange(args):
+            member, assign, key = args
+            return (jnp.asarray(False), jnp.zeros(2, i32), member, assign,
+                    key)
+
+        def do_exchange(args):
+            member, assign, key = args
+            key, sub = jax.random.split(key)
+            pairs = jax.random.randint(sub, (exchange_samples, 2), 0, n,
+                                       dtype=i32)
+            dn, dm = pairs[:, 0], pairs[:, 1]
+            si, sj = assign[dn], assign[dm]
+            okay = ((dn != dm) & (si != sj)
+                    & can_join(sj, dn) & can_join(si, dm))
+
+            def onehot(srv, dev):
+                # an out-of-reach slot encodes as the all-zero row
+                return jnp.arange(r_ex)[None, :] == slot_of[srv, dev][:, None]
+
+            def ex_base(rows):
+                return (member[ex_bucket.servers[rows][:, None],
+                               ex_bucket.idx[rows]]
+                        & ex_bucket.exists[rows])
+
+            gi = ex_base(si) ^ onehot(si, dn) ^ onehot(si, dm)
+            gj = ex_base(sj) ^ onehot(sj, dm) ^ onehot(sj, dn)
+            costs = ex_cost_v(jnp.concatenate([si, sj]),
+                              jnp.concatenate([gi, gj]))
+            ci, cj = costs[:exchange_samples], costs[exchange_samples:]
+            old = cur[si] + cur[sj]
+            delta = ci + cj - old
+            perm = okay & (delta < -rel_tol * jnp.maximum(old, 1e-9))
+            if permission == "pareto":
+                perm &= harmless(ci, cur[si]) & harmless(cj, cur[sj])
+            masked = jnp.where(perm, delta, _INF)
+            e = jnp.argmin(masked)
+            applied = jnp.isfinite(masked[e])
+            ri, rj = si[e], sj[e]
+            dnb, dmb = dn[e], dm[e]
+            m2 = member.at[ri, dnb].set(
+                jnp.where(applied, False, member[ri, dnb]))
+            m2 = m2.at[rj, dnb].set(jnp.where(applied, True, m2[rj, dnb]))
+            m2 = m2.at[rj, dmb].set(jnp.where(applied, False, m2[rj, dmb]))
+            m2 = m2.at[ri, dmb].set(jnp.where(applied, True, m2[ri, dmb]))
+            a2 = assign.at[dnb].set(jnp.where(applied, rj, assign[dnb]))
+            a2 = a2.at[dmb].set(jnp.where(applied, ri, a2[dmb]))
+            return (applied, jnp.stack([ri, rj]), m2, a2, key)
 
         args = (member, assign, key)
         if exchange_samples:
             applied, rows, member, assign, key = lax.cond(
-                has_transfer,
-                lambda a: do_transfer(a, t_dev, t_src, t_dst),
-                lambda a: do_exchange(a, cur), args)
+                has_transfer, do_transfer, do_exchange, args)
         else:
             applied, rows, member, assign, key = lax.cond(
-                has_transfer,
-                lambda a: do_transfer(a, t_dev, t_src, t_dst),
-                no_exchange, args)
-        cur, toggle = lax.cond(
-            applied,
-            lambda a: refresh(*a),
-            lambda a: (a[2], a[3]), (member, rows, cur, toggle))
+                has_transfer, do_transfer, no_exchange, args)
+        cur, toggles = refresh_server(member, rows[0], applied, cur, toggles)
+        cur, toggles = refresh_server(member, rows[1], applied, cur, toggles)
         moves = moves + applied.astype(i32)
         trace = trace.at[moves].set(
             jnp.where(applied, jnp.sum(cur), trace[moves]))
-        return (member, assign, cur, toggle, moves, key, trace, ~applied)
+        return (member, assign, cur, toggles, moves, key, trace, ~applied)
 
     def cond(state):
         return (~state[-1]) & (state[4] < max_moves)
 
-    state = (member, assignment, cur0, toggle0, jnp.asarray(0, i32), key,
+    state = (member, assignment, cur0, toggles0, jnp.asarray(0, i32), key,
              trace0, jnp.asarray(False))
-    member, assignment, cur, toggle, moves, _, trace, _ = lax.while_loop(
+    member, assignment, cur, toggles, moves, _, trace, _ = lax.while_loop(
         cond, body, state)
-    return member, assignment, cur, toggle, moves, trace
-
-
-@partial(jax.jit, donate_argnums=(0, 1, 2),
-         static_argnames=("kind", "profile", "permission", "min_residual",
-                          "max_moves", "exchange_samples"))
-def _run_device_compact(member_c, member, assignment, key, consts_c,
-                        random_f_c, inv_dist_c, reach_idx, slot_valid,
-                        slot_of, cloud_const, rel_tol, *, kind, profile,
-                        permission, min_residual, max_moves,
-                        exchange_samples):
-    """The adjustment loop in compacted (K, R) reachable-slot space.
-
-    ``member_c[k, r]`` mirrors ``member[k, reach_idx[k, r]]`` for valid
-    slots; the toggle cache, candidate argmin, and two-row refresh all run at
-    width R, and each applied move is scattered back to the dense ``member``
-    mask. Returns (member_c, member, assignment, cur, toggle_c, n_moves,
-    trace) with the same trace convention as :func:`_run_device`.
-    """
-    k, r = member_c.shape
-    n = member.shape[1]
-    cost = _compact_cost_fn(kind, profile, consts_c, random_f_c, inv_dist_c,
-                            cloud_const)
-    cost_v = jax.vmap(cost)
-    eye = jnp.eye(r, dtype=bool)
-    idx_n = jnp.arange(n)
-    idx_k = jnp.arange(k, dtype=jnp.int32)
-    i32 = jnp.int32
-
-    def rows_costs(member_c, rows):
-        """Solve each row's current group and all R single-slot toggles."""
-        base = member_c[rows]                                     # (B, r)
-        masks = jnp.concatenate(
-            [base[:, None, :], base[:, None, :] ^ eye[None]], axis=1)
-        sids = jnp.repeat(rows, r + 1)
-        return cost_v(sids, masks.reshape(-1, r)).reshape(rows.shape[0], r + 1)
-
-    # ---- init: fill the (K, R) toggle cache, one server at a time ----
-    all_costs = lax.map(lambda s: rows_costs(member_c, s[None])[0],
-                        jnp.arange(k, dtype=i32))                 # (k, r+1)
-    cur0 = all_costs[:, 0]
-    toggle0 = all_costs[:, 1:]
-
-    trace0 = jnp.full(max_moves + 1, jnp.nan, cur0.dtype)
-    trace0 = trace0.at[0].set(jnp.sum(cur0))
-
-    def harmless(new, old):
-        return new <= old + rel_tol * jnp.maximum(old, 1e-9)
-
-    def refresh(member_c, rows, cur, toggle):
-        costs = rows_costs(member_c, rows)                        # (2, r+1)
-        return (cur.at[rows].set(costs[:, 0]),
-                toggle.at[rows].set(costs[:, 1:]))
-
-    def onehot(slots):
-        # slot == r (the out-of-reach sentinel) encodes as the all-zero row
-        return jnp.arange(r)[None, :] == slots[:, None]
-
-    def do_transfer(args, t_dev, t_src, t_dst):
-        member_c, member, assign, key = args
-        mc = member_c.at[t_src, slot_of[t_src, t_dev]].set(False)
-        mc = mc.at[t_dst, slot_of[t_dst, t_dev]].set(True)
-        m2 = member.at[t_src, t_dev].set(False).at[t_dst, t_dev].set(True)
-        a2 = assign.at[t_dev].set(t_dst)
-        return (jnp.asarray(True), jnp.stack([t_src, t_dst]), mc, m2, a2, key)
-
-    def no_exchange(args):
-        member_c, member, assign, key = args
-        return (jnp.asarray(False), jnp.zeros(2, i32), member_c, member,
-                assign, key)
-
-    def do_exchange(args, cur):
-        member_c, member, assign, key = args
-        key, sub = jax.random.split(key)
-        pairs = jax.random.randint(sub, (exchange_samples, 2), 0, n, dtype=i32)
-        dn, dm = pairs[:, 0], pairs[:, 1]
-        si, sj = assign[dn], assign[dm]
-        sl_i_m = slot_of[si, dm]                       # dm's slot at si
-        sl_j_n = slot_of[sj, dn]                       # dn's slot at sj
-        okay = (dn != dm) & (si != sj) & (sl_j_n < r) & (sl_i_m < r)
-        gi = member_c[si] ^ onehot(slot_of[si, dn]) ^ onehot(sl_i_m)
-        gj = member_c[sj] ^ onehot(slot_of[sj, dm]) ^ onehot(sl_j_n)
-        new_costs = cost_v(jnp.concatenate([si, sj]),
-                           jnp.concatenate([gi, gj]))
-        ci, cj = new_costs[:exchange_samples], new_costs[exchange_samples:]
-        old = cur[si] + cur[sj]
-        delta = ci + cj - old
-        perm = okay & (delta < -rel_tol * jnp.maximum(old, 1e-9))
-        if permission == "pareto":
-            perm &= harmless(ci, cur[si]) & harmless(cj, cur[sj])
-        masked = jnp.where(perm, delta, _INF)
-        b = jnp.argmin(masked)
-        applied = jnp.isfinite(masked[b])
-        ri, rj = si[b], sj[b]
-        dnb, dmb = dn[b], dm[b]
-        mc = member_c.at[ri].set(jnp.where(applied, gi[b], member_c[ri]))
-        mc = mc.at[rj].set(jnp.where(applied, gj[b], mc[rj]))
-        m2 = member.at[ri, dnb].set(
-            jnp.where(applied, False, member[ri, dnb]))
-        m2 = m2.at[rj, dnb].set(jnp.where(applied, True, m2[rj, dnb]))
-        m2 = m2.at[rj, dmb].set(jnp.where(applied, False, m2[rj, dmb]))
-        m2 = m2.at[ri, dmb].set(jnp.where(applied, True, m2[ri, dmb]))
-        a2 = assign.at[dnb].set(jnp.where(applied, rj, assign[dnb]))
-        a2 = a2.at[dmb].set(jnp.where(applied, ri, a2[dmb]))
-        return (applied, jnp.stack([ri, rj]), mc, m2, a2, key)
-
-    def body(state):
-        member_c, member, assign, cur, toggle, moves, key, trace, _ = state
-        # -- scan all valid (server, slot) transfer candidates (no solves) --
-        cur_src = cur[assign]                                     # (n,)
-        minus = toggle[assign, slot_of[assign, idx_n]]            # (n,)
-        minus_delta = minus - cur_src
-        dev = reach_idx                                           # (k, r)
-        src = assign[dev]                                         # (k, r)
-        delta = minus_delta[dev] + toggle - cur[:, None]
-        scale = jnp.maximum(cur[:, None] + cur_src[dev], 1e-9)
-        gsize = jnp.sum(member_c, axis=1)
-        valid = (slot_valid & (src != idx_k[:, None])
-                 & (gsize[src] > min_residual))
-        permitted = valid & (delta < -rel_tol * scale)
-        if permission == "pareto":
-            permitted &= (harmless(toggle, cur[:, None])
-                          & harmless(minus, cur_src)[dev])
-        masked = jnp.where(permitted, delta, _INF)
-        best = jnp.min(masked)
-        has_transfer = jnp.isfinite(best)
-        # explicit device-major order key reproduces the dense engine's
-        # argmin tie-breaking (smallest n*K + k among equal deltas)
-        order = dev.astype(i32) * k + idx_k[:, None]
-        tie = jnp.where(masked == best, order, _I32_BIG)
-        p = jnp.argmin(tie)
-        t_dev = dev.reshape(-1)[p]
-        t_dst = (p // r).astype(i32)
-        t_src = assign[t_dev]
-
-        args = (member_c, member, assign, key)
-        if exchange_samples:
-            applied, rows, member_c, member, assign, key = lax.cond(
-                has_transfer,
-                lambda a: do_transfer(a, t_dev, t_src, t_dst),
-                lambda a: do_exchange(a, cur), args)
-        else:
-            applied, rows, member_c, member, assign, key = lax.cond(
-                has_transfer,
-                lambda a: do_transfer(a, t_dev, t_src, t_dst),
-                no_exchange, args)
-        cur, toggle = lax.cond(
-            applied,
-            lambda a: refresh(*a),
-            lambda a: (a[2], a[3]), (member_c, rows, cur, toggle))
-        moves = moves + applied.astype(i32)
-        trace = trace.at[moves].set(
-            jnp.where(applied, jnp.sum(cur), trace[moves]))
-        return (member_c, member, assign, cur, toggle, moves, key, trace,
-                ~applied)
-
-    def cond(state):
-        return (~state[-1]) & (state[5] < max_moves)
-
-    state = (member_c, member, assignment, cur0, toggle0,
-             jnp.asarray(0, i32), key, trace0, jnp.asarray(False))
-    (member_c, member, assignment, cur, toggle, moves, _, trace,
-     _) = lax.while_loop(cond, body, state)
-    return member_c, member, assignment, cur, toggle, moves, trace
+    return member, assignment, cur, toggles, moves, trace
 
 
 class FastAssociationEngine:
@@ -436,11 +377,13 @@ class FastAssociationEngine:
     transfer is permitted, identical permission rules and tolerances), with
     the whole loop resident on device.
 
-    ``compact`` selects the sweep space: ``True`` runs in per-server
-    compacted (K, R) reachable-slot space, ``False`` in dense (K, N) space,
-    and ``"auto"`` (default) compacts whenever availability is actually
-    sparse (R < N). Both spaces share move selection order, so they land on
-    the same stable point.
+    ``compact`` selects the sweep space — all of them run the SAME
+    move-selection kernel, configured with different slot-index maps:
+    ``False`` = dense (K, N) identity maps, ``True`` = flat compacted
+    (K, R) reachable-slot space, ``"bucketed"`` = per-bucket (K_b, R_b)
+    adaptive widths, and ``"auto"`` (default) picks flat compaction whenever
+    availability is actually sparse (R < N). All spaces share move selection
+    order, so they land on the same stable point.
 
     Differences from the reference: exchange candidates are drawn with the
     JAX PRNG instead of NumPy's (so exchange *sequences* differ run-to-run
@@ -454,7 +397,7 @@ class FastAssociationEngine:
                  seed: int = 0, rel_tol: float = 1e-5,
                  profile: str = "default", compact: bool | str = "auto"):
         assert permission in ("utilitarian", "pareto"), permission
-        assert compact in (True, False, "auto"), compact
+        assert compact in (True, False, "auto", "bucketed"), compact
         self.sc = sc
         self.kind = kind
         self.profile = profile
@@ -473,30 +416,70 @@ class FastAssociationEngine:
                        + sc.lp.lambda_t * cloud_delay(sc.srv),
                        dtype=np.float32))
         self.reach: ReachIndex | None = None
+        self.reach_buckets: ReachBuckets | None = None
         try:
             self.reach = reach_index_map(self.avail)
         except ValueError:
-            if compact is True:
+            if compact in (True, "bucketed"):
                 raise
         if compact == "auto":
             compact = (self.reach is not None
                        and self.reach.r_max < sc.n_devices)
-        self.compact = bool(compact)
-        if self.compact:
-            rows = jnp.arange(sc.n_servers)[:, None]
-            ridx = jnp.asarray(self.reach.idx)
-            # pre-gather every per-device quantity into (K, R) slot space;
-            # scalar-per-server leaves (w, cloud consts) pass through
-            self._consts_c = jax.tree.map(
-                lambda x: x[rows, ridx] if x.ndim == 2 else x,
-                self.solver.consts)
-            self._random_f_c = self.solver.random_f[ridx]
-            self._inv_dist_c = self.solver.inv_dist[rows, ridx]
-            self._reach_idx = ridx
-            self._slot_valid = jnp.asarray(self.reach.valid)
-            self._slot_of = jnp.asarray(self.reach.slot)
+        self.compact = "bucketed" if compact == "bucketed" else bool(compact)
+        k, n = sc.n_servers, sc.n_devices
+        if self.compact == "bucketed":
+            rbk = reach_index_map(self.avail, bucketed=True)
+            self.reach_buckets = rbk
+            self._buckets = tuple(
+                self._gather_bucket(b.servers, b.idx, b.valid, b.valid)
+                for b in rbk.buckets)
+            self._slot_of = jnp.asarray(rbk.slot)
+            self._bucket_of = jnp.asarray(rbk.bucket_of)
+            self._row_of = jnp.asarray(rbk.row_of)
+            # exchanges hit arbitrary server pairs, so they are priced in
+            # one shared flat (K, R_max) space (same slot numbering as the
+            # per-bucket maps) instead of once per width bucket
+            self._ex_bucket = self._gather_bucket(
+                np.arange(k, dtype=np.int32), self.reach.idx,
+                self.reach.valid, self.reach.valid)
+        elif self.compact:
+            r = self.reach
+            servers = np.arange(k, dtype=np.int32)
+            self._buckets = (
+                self._gather_bucket(servers, r.idx, r.valid, r.valid),)
+            self._slot_of = jnp.asarray(r.slot)
+            self._bucket_of = jnp.zeros(k, jnp.int32)
+            self._row_of = jnp.arange(k, dtype=jnp.int32)
+            self._ex_bucket = self._buckets[0]
+        else:
+            # dense sweep = identity index maps: every slot exists (so an
+            # out-of-reach *current* member is still priced, like the host
+            # reference engine), and availability only gates candidacy
+            servers = np.arange(k, dtype=np.int32)
+            ident = np.broadcast_to(np.arange(n, dtype=np.int32), (k, n))
+            self._buckets = (self._gather_bucket(
+                servers, ident, np.ones((k, n), bool), self.avail),)
+            self._slot_of = jnp.asarray(np.ascontiguousarray(ident))
+            self._bucket_of = jnp.zeros(k, jnp.int32)
+            self._row_of = jnp.arange(k, dtype=jnp.int32)
+            self._ex_bucket = self._buckets[0]
         self.last_state: dict | None = None   # debug: cur/toggle cache dump
         self.last_tier_moves: list[int] | None = None
+
+    def _gather_bucket(self, servers, idx, exists, ok) -> _Bucket:
+        """Pre-gather every per-device RA quantity into this bucket's
+        (K_b, R_b) slot space; per-server (1-D) leaves gather by server id."""
+        srv = jnp.asarray(servers, jnp.int32)
+        ridx = jnp.asarray(idx)
+        rows = srv[:, None]
+        consts = jax.tree.map(
+            lambda x: x[rows, ridx] if x.ndim == 2 else x[srv],
+            self.solver.consts)
+        return _Bucket(servers=srv, idx=ridx,
+                       exists=jnp.asarray(exists), ok=jnp.asarray(ok),
+                       consts=consts,
+                       random_f=self.solver.random_f[ridx],
+                       inv_dist=self.solver.inv_dist[rows, ridx])
 
     def initial_assignment(self, init: str = "nearest") -> np.ndarray:
         return initial_assignment(self.sc, self.avail, self.rng, init)
@@ -593,36 +576,29 @@ class FastAssociationEngine:
                     "compact sweep requires every device assigned within "
                     f"reach; devices {bad.tolist()} are not (e.g. device "
                     f"{bad[0]} -> server {assignment[bad[0]]})")
-            member_c0 = ((assignment[self.reach.idx]
-                          == np.arange(k)[:, None]) & self.reach.valid)
-            member_c, member, assign, cur, toggle, moves, trace = \
-                _run_device_compact(
-                    jnp.asarray(member_c0), jnp.asarray(member0),
-                    jnp.asarray(assignment, jnp.int32), key,
-                    self._consts_c, self._random_f_c, self._inv_dist_c,
-                    self._reach_idx, self._slot_valid, self._slot_of,
-                    self.cloud_const, jnp.float32(rel_tol),
-                    kind=self.kind, profile=profile,
-                    permission=self.permission,
-                    min_residual=self.min_residual, max_moves=max_moves,
-                    exchange_samples=exchange_samples)
-            self.last_state = {"member": np.asarray(member),
-                               "member_compact": np.asarray(member_c),
-                               "cur_cost": np.asarray(cur),
-                               "toggle_cost_compact": np.asarray(toggle),
-                               "reach": self.reach}
+        member, assign, cur, toggles, moves, trace = _run_device(
+            jnp.asarray(member0), jnp.asarray(assignment, jnp.int32), key,
+            self._buckets, self._ex_bucket, self._slot_of, self._bucket_of,
+            self._row_of, self.cloud_const, jnp.float32(rel_tol), kind=self.kind,
+            profile=profile, permission=self.permission,
+            min_residual=self.min_residual, max_moves=max_moves,
+            exchange_samples=exchange_samples)
+        member_np = np.asarray(member)
+        self.last_state = {"member": member_np,
+                           "cur_cost": np.asarray(cur)}
+        if self.compact == "bucketed":
+            self.last_state.update(
+                toggle_cost_buckets=[np.asarray(t) for t in toggles],
+                reach_buckets=self.reach_buckets)
+        elif self.compact:
+            r = self.reach
+            self.last_state.update(
+                member_compact=(member_np[np.arange(k)[:, None], r.idx]
+                                & r.valid),
+                toggle_cost_compact=np.asarray(toggles[0]),
+                reach=r)
         else:
-            member, assign, cur, toggle, moves, trace = _run_device(
-                jnp.asarray(member0), jnp.asarray(assignment, jnp.int32),
-                key, self.solver.consts, self.solver.random_f,
-                self.solver.inv_dist, jnp.asarray(self.avail),
-                self.cloud_const, jnp.float32(rel_tol), kind=self.kind,
-                profile=profile, permission=self.permission,
-                min_residual=self.min_residual, max_moves=max_moves,
-                exchange_samples=exchange_samples)
-            self.last_state = {"member": np.asarray(member),
-                               "cur_cost": np.asarray(cur),
-                               "toggle_cost": np.asarray(toggle)}
+            self.last_state.update(toggle_cost=np.asarray(toggles[0]))
         moves = int(moves)
         trace = [float(x) for x in np.asarray(trace[:moves + 1], np.float64)]
         return np.asarray(assign, np.int64), member, moves, trace

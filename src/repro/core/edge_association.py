@@ -507,9 +507,12 @@ def evaluate_scheme(sc: Scenario, scheme: str, *, seed: int = 0,
       loop     — faithful Algorithm 3 (AssociationEngine.run)
     ``batched=False`` is a legacy alias for ``engine="loop"``.
 
-    Fast-engine options: ``compact`` picks the sweep space (dense (K, N) vs
-    compacted reachable-slot (K, R); "auto" compacts when availability is
-    sparse), and ``tiers`` — a ``ra.TIER_PLANS`` plan name or profile tuple —
+    Fast-engine options: ``compact`` picks the sweep space — all run the one
+    unified move-selection kernel with different slot-index maps: ``False``
+    dense (K, N), ``True`` flat compacted reachable-slot (K, R),
+    ``"bucketed"`` adaptive per-bucket (K_b, R_b) widths, ``"auto"`` compacts
+    when availability is sparse — and ``tiers`` — a ``ra.TIER_PLANS`` plan
+    name or profile tuple —
     switches to the multi-tier warm-started descent driver
     (:meth:`~repro.core.assoc_fast.FastAssociationEngine.run_tiered`), in
     which case ``profile`` only sets the engine default and the tier plan

@@ -46,8 +46,48 @@ class ReachIndex:
     def density(self) -> float:
         return float(self.valid.mean())
 
+    @property
+    def padded_fraction(self) -> float:
+        """Fraction of compacted slots that are padding (wasted sweep work)."""
+        return 1.0 - self.density
 
-def reach_index_map(avail: np.ndarray) -> ReachIndex:
+
+@dataclass(frozen=True)
+class ReachBucket:
+    """One width-bucket of :class:`ReachBuckets`: the servers whose reach
+    count shares a binary magnitude, compacted at that bucket's own width."""
+
+    servers: np.ndarray    # (K_b,) int32 global server ids
+    idx: np.ndarray        # (K_b, R_b) int32 device per slot (0-padded)
+    valid: np.ndarray      # (K_b, R_b) bool — real slots
+    width: int             # R_b = widest reach count in this bucket
+
+
+@dataclass(frozen=True)
+class ReachBuckets:
+    """Adaptive-width compaction maps: servers grouped into binary buckets by
+    reach count (same power-of-two scheme as ``GroupSolver.solve_batch``'s
+    chunking), each bucket compacted to its own slot width R_b instead of
+    every server padding to the global max R. ``slot``/``bucket_of``/
+    ``row_of`` locate any (server, device) pair: device ``n`` lives at slot
+    ``slot[k, n]`` of row ``row_of[k]`` in bucket ``bucket_of[k]`` (slot
+    ``r_max`` is the shared out-of-reach sentinel — it is >= every bucket
+    width, so per-bucket ``slot < R_b`` tests reject it)."""
+
+    buckets: tuple[ReachBucket, ...]
+    bucket_of: np.ndarray  # (K,) int32
+    row_of: np.ndarray     # (K,) int32 — row within the owning bucket
+    slot: np.ndarray       # (K, N) int32, r_max == "unreachable"
+    r_max: int
+
+    @property
+    def padded_fraction(self) -> float:
+        total = sum(b.idx.size for b in self.buckets)
+        real = sum(int(b.valid.sum()) for b in self.buckets)
+        return 1.0 - real / max(total, 1)
+
+
+def reach_index_map(avail: np.ndarray, *, bucketed: bool = False):
     """Compute the compacted reachable-set index maps of ``avail`` (K, N).
 
     The fused candidate sweeps in :mod:`repro.core.assoc_fast` run in this
@@ -56,6 +96,11 @@ def reach_index_map(avail: np.ndarray) -> ReachIndex:
     group solve shrink by the reach density. Every server must reach at least
     one device only if it is ever used; zero-reach *devices* are rejected
     because they cannot be associated anywhere (constraint 17e).
+
+    ``bucketed=True`` returns :class:`ReachBuckets` instead: servers are
+    grouped by ``ceil(log2(reach_count))`` and each bucket is compacted at
+    its own width, so one dense-reach server no longer pads every other
+    server's row to the global max (see ``padded_fraction``).
     """
     avail = np.asarray(avail, dtype=bool)
     if not avail.any(axis=0).all():
@@ -63,15 +108,40 @@ def reach_index_map(avail: np.ndarray) -> ReachIndex:
     k, n = avail.shape
     counts = avail.sum(axis=1)
     r_max = int(counts.max()) if k else 0
-    idx = np.zeros((k, r_max), dtype=np.int32)
-    valid = np.zeros((k, r_max), dtype=bool)
+
+    def fill(servers, width, slot):
+        """Fill one group's (idx, valid) rows and its servers' slot-map rows
+        — the ONE place slot numbering / padding semantics live."""
+        idx = np.zeros((len(servers), width), dtype=np.int32)
+        valid = np.zeros((len(servers), width), dtype=bool)
+        for row, srv in enumerate(servers):
+            reach = np.flatnonzero(avail[srv])
+            idx[row, :reach.size] = reach
+            valid[row, :reach.size] = True
+            slot[srv, reach] = np.arange(reach.size, dtype=np.int32)
+        return idx, valid
+
     slot = np.full((k, n), r_max, dtype=np.int32)
-    for srv in range(k):
-        reach = np.flatnonzero(avail[srv])
-        idx[srv, :reach.size] = reach
-        valid[srv, :reach.size] = True
-        slot[srv, reach] = np.arange(reach.size, dtype=np.int32)
-    return ReachIndex(idx=idx, valid=valid, slot=slot, r_max=r_max)
+    if not bucketed:
+        idx, valid = fill(range(k), r_max, slot)
+        return ReachIndex(idx=idx, valid=valid, slot=slot, r_max=r_max)
+
+    # binary bucketing: key = ceil(log2(count)); a zero-reach server (legal
+    # when it is simply never used) joins the narrowest bucket
+    keys = np.array([max(int(c) - 1, 0).bit_length() for c in counts])
+    buckets = []
+    bucket_of = np.zeros(k, dtype=np.int32)
+    row_of = np.zeros(k, dtype=np.int32)
+    for b, key in enumerate(sorted(set(keys.tolist()))):
+        servers = np.flatnonzero(keys == key).astype(np.int32)
+        width = max(int(counts[servers].max()), 1)
+        idx, valid = fill(servers, width, slot)
+        bucket_of[servers] = b
+        row_of[servers] = np.arange(servers.size, dtype=np.int32)
+        buckets.append(ReachBucket(servers=servers, idx=idx, valid=valid,
+                                   width=width))
+    return ReachBuckets(buckets=tuple(buckets), bucket_of=bucket_of,
+                        row_of=row_of, slot=slot, r_max=r_max)
 
 
 @dataclass

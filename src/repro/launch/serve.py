@@ -45,7 +45,7 @@ def main():
                           global_batch=max(n_batch, 2), kind="decode")
     bundle = make_serve_step(model, mesh, shape)
 
-    with jax.set_mesh(mesh):
+    with mesh:
         params = jax.jit(model.init,
                          out_shardings=bundle.params_shardings)(
             jax.random.key(0))

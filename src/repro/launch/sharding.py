@@ -108,7 +108,7 @@ def param_pspec(path_str: str, shape, mesh, *, mode: str = "fsdp") -> P:
 def param_shardings(params_spec, mesh, *, mode: str = "fsdp"):
     """Pytree of NamedSharding matching a params pytree (of arrays or
     ShapeDtypeStructs)."""
-    flat, treedef = jax.tree.flatten_with_path(params_spec)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_spec)
     out = []
     for path, leaf in flat:
         spec = param_pspec(_key_str(path), leaf.shape, mesh, mode=mode)

@@ -37,7 +37,7 @@ from repro.optim import adamw, apply_updates, clip_by_global_norm
 
 def _hier_param_shardings(params_spec, mesh, *, mode="fsdp"):
     """Shardings for pod-stacked parameters: P('pod', <per-param rules>)."""
-    flat, treedef = jax.tree.flatten_with_path(params_spec)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_spec)
     out = []
     for path, leaf in flat:
         inner = param_pspec(_key_str(path), leaf.shape[1:], mesh, mode=mode)

@@ -76,7 +76,7 @@ def main():
     print(f"mesh {dict(mesh.shape)} | {args.arch} | mode={args.mode} "
           f"| batch {shape.global_batch} x seq {shape.seq_len}")
 
-    with jax.set_mesh(mesh):
+    with mesh:
         params = jax.jit(
             model.init, out_shardings=(
                 bundle.params_shardings if args.mode != "hierarchical"

@@ -170,6 +170,117 @@ def test_evaluate_assignment_matches_finalize():
 
 
 # ---------------------------------------------------------------------------
+# Bucketed (adaptive slot width) sweeps
+# ---------------------------------------------------------------------------
+
+def test_reach_index_map_bucketed_structure():
+    """Binary buckets must partition the servers, keep per-server slot maps
+    consistent with avail, and strictly reduce padding on skewed reach."""
+    sc = make_large_scenario(250, 10, seed=0)
+    avail = np.asarray(sc.avail)
+    flat = reach_index_map(avail)
+    rbk = reach_index_map(avail, bucketed=True)
+    counts = avail.sum(axis=1)
+    seen = np.zeros(sc.n_servers, dtype=int)
+    for b, bucket in enumerate(rbk.buckets):
+        assert bucket.width == counts[bucket.servers].max()
+        for row, srv in enumerate(bucket.servers):
+            seen[srv] += 1
+            assert rbk.bucket_of[srv] == b and rbk.row_of[srv] == row
+            reach = np.flatnonzero(avail[srv])
+            np.testing.assert_array_equal(bucket.idx[row, :reach.size], reach)
+            assert bucket.valid[row, :reach.size].all()
+            assert not bucket.valid[row, reach.size:].any()
+            # the global slot map inverts the bucket's index map
+            np.testing.assert_array_equal(
+                rbk.slot[srv, reach], np.arange(reach.size))
+            assert (rbk.slot[srv, ~avail[srv]] == rbk.r_max).all()
+    assert (seen == 1).all(), "buckets must partition the servers"
+    # skewed reach counts -> narrower buckets waste strictly fewer slots
+    assert rbk.padded_fraction < flat.padded_fraction
+
+
+@pytest.mark.parametrize("n,k,seed", PARITY_CASES)
+def test_bucketed_matches_flat_compact_stable_point(n, k, seed):
+    """Bucketed-vs-flat gate (skewed reach): per-bucket slot widths must not
+    change move selection — same stable assignment, same move count."""
+    sc = make_scenario(n, k, seed=seed, reach_m=300.0)
+    flat = FastAssociationEngine(sc, kind="fast", seed=0, compact=True).run(
+        "nearest", exchange_samples=0)
+    bucketed = FastAssociationEngine(
+        sc, kind="fast", seed=0, compact="bucketed").run(
+        "nearest", exchange_samples=0)
+    assert np.array_equal(bucketed.assignment, flat.assignment)
+    assert bucketed.n_adjustments == flat.n_adjustments
+    assert (abs(bucketed.total_cost - flat.total_cost)
+            <= 1e-4 * flat.total_cost)
+
+
+def test_bucketed_exchanges_and_availability():
+    """The exchange branch must work across buckets: cost no worse than the
+    transfers-only stable point and every placement stays within reach."""
+    sc = make_scenario(16, 4, seed=1, reach_m=300.0)
+    no_ex = FastAssociationEngine(
+        sc, kind="fast", seed=0, compact="bucketed").run(
+        "nearest", exchange_samples=0)
+    ex = FastAssociationEngine(
+        sc, kind="fast", seed=0, compact="bucketed").run(
+        "nearest", exchange_samples=64)
+    assert ex.total_cost <= no_ex.total_cost * (1 + 1e-6)
+    avail = np.asarray(sc.avail)
+    for dev, srv in enumerate(ex.assignment):
+        assert avail[srv, dev]
+
+
+def test_bucketed_toggle_cache_matches_uncached_solves():
+    """Every bucket's toggle cache must agree with from-scratch dense-mask
+    group solves on valid slots."""
+    sc = make_scenario(16, 4, seed=2, reach_m=300.0)
+    eng = FastAssociationEngine(sc, kind="fast", seed=0, compact="bucketed")
+    eng.run("nearest", exchange_samples=0)
+    st = eng.last_state
+    rbk = st["reach_buckets"]
+    member = st["member"]
+    cloud = np.asarray(eng.cloud_const)
+
+    def fresh_cost(server, mask):
+        sol = eng.solver.solve_batch(np.array([server]), mask[None, :])
+        base = float(np.asarray(sol.cost)[0])
+        return base + (cloud[server] if mask.any() else 0.0)
+
+    for b, bucket in enumerate(rbk.buckets):
+        toggle = st["toggle_cost_buckets"][b]
+        for row, srv in enumerate(bucket.servers):
+            assert fresh_cost(srv, member[srv]) == pytest.approx(
+                float(st["cur_cost"][srv]), rel=1e-5, abs=1e-6)
+            for r in np.flatnonzero(bucket.valid[row])[:4]:
+                toggled = member[srv].copy()
+                d = bucket.idx[row, r]
+                toggled[d] = ~toggled[d]
+                assert fresh_cost(srv, toggled) == pytest.approx(
+                    float(toggle[row, r]), rel=1e-5, abs=1e-6)
+
+
+def test_bucketed_rejects_out_of_reach_assignment():
+    sc = make_scenario(16, 4, seed=2, reach_m=300.0)
+    avail = np.asarray(sc.avail)
+    dev = int(np.argmin(avail.sum(axis=0)))
+    srv = int(np.flatnonzero(~avail[:, dev])[0])
+    eng = FastAssociationEngine(sc, kind="fast", seed=0, compact="bucketed")
+    bad = eng.initial_assignment("nearest")
+    bad[dev] = srv
+    with pytest.raises(ValueError, match="within\\s+reach"):
+        eng.run(assignment=bad, exchange_samples=0)
+
+
+def test_evaluate_scheme_bucketed_dispatch():
+    from repro.core.edge_association import evaluate_scheme
+    sc = make_scenario(12, 3, seed=1, reach_m=300.0)
+    res = evaluate_scheme(sc, "hfel", seed=0, compact="bucketed")
+    assert np.isfinite(res.total_cost) and res.total_cost > 0
+
+
+# ---------------------------------------------------------------------------
 # Two-tier descent
 # ---------------------------------------------------------------------------
 

@@ -107,6 +107,39 @@ def test_monotone_trace_stability_and_availability():
     assert res2.n_adjustments == 0
 
 
+def test_dense_path_is_identity_bucket():
+    """The dense sweep must be the unified kernel configured with identity
+    index maps — idx[k] = arange(N), every slot exists, candidacy gated by
+    avail — not a separate code path."""
+    sc = make_scenario(12, 3, seed=1, reach_m=300.0)
+    eng = FastAssociationEngine(sc, kind="fast", seed=0, compact=False)
+    assert len(eng._buckets) == 1
+    b = eng._buckets[0]
+    n, k = sc.n_devices, sc.n_servers
+    np.testing.assert_array_equal(
+        np.asarray(b.idx), np.tile(np.arange(n), (k, 1)))
+    assert np.asarray(b.exists).all()
+    np.testing.assert_array_equal(np.asarray(b.ok), np.asarray(sc.avail))
+    np.testing.assert_array_equal(
+        np.asarray(eng._slot_of), np.tile(np.arange(n), (k, 1)))
+
+
+@pytest.mark.parametrize("compact", [False, True, "bucketed"])
+def test_identity_and_slot_maps_move_for_move_vs_reference(compact):
+    """Every sweep-space configuration of the unified kernel must reproduce
+    the host reference engine's applied moves exactly at
+    ``exchange_samples=0`` (the PR-1 dense gate, now covering all maps)."""
+    sc = make_scenario(16, 4, seed=2, reach_m=300.0)
+    ref = AssociationEngine(sc, kind="fast", seed=0).run_batched(
+        "nearest", exchange_samples=0)
+    fast = FastAssociationEngine(sc, kind="fast", seed=0, compact=compact).run(
+        "nearest", exchange_samples=0)
+    assert fast.n_adjustments == ref.n_adjustments
+    assert np.array_equal(fast.assignment, ref.assignment)
+    np.testing.assert_allclose(np.asarray(fast.cost_trace),
+                               np.asarray(ref.cost_trace), rtol=1e-4)
+
+
 def test_large_scenario_generator_shapes():
     sc = make_large_scenario(2000, 50, seed=0)
     assert sc.n_devices == 2000 and sc.n_servers == 50
