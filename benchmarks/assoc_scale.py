@@ -14,6 +14,12 @@ Sections:
     bounded-move run, so jit-compile noise mostly cancels);
   * two-tier descent: coarse-to-stability + default polish vs a pure
     default-profile run at N=250/K=10 (cost parity at lower wall time);
+  * churn: device-mobility re-convergence at N=1000/K=20 — one
+    perturb_scenario tick (drift + reach flips + departures), then the
+    incremental warm rerun (patched reach maps, stale-row-only toggle-cache
+    refresh) vs a cold start on the perturbed scenario, with a hard
+    bit-identical parity gate between the warm stable point and a cold
+    rebuild from the same repaired assignment;
   * the N=2000/K=50 stress point run END-TO-END to a stable system point
     with the tiered compacted engine — the regime the dense engine cannot
     finish in benchmark time. This is a multi-minute run (~1s per coarse
@@ -38,7 +44,8 @@ import numpy as np
 from repro.core import make_scenario
 from repro.core.assoc_fast import FastAssociationEngine
 from repro.core.edge_association import AssociationEngine
-from repro.core.scenario import make_large_scenario, reach_index_map
+from repro.core.scenario import (make_large_scenario, perturb_scenario,
+                                 reach_index_map)
 
 
 def _head_to_head_n60(report, timings, quick):
@@ -228,6 +235,87 @@ def _stress(report, timings, n, k, max_moves, exchanges, rel_tol=1e-3):
             "cost_drop": improved, "stable": stable, "rel_tol": rel_tol}
 
 
+def _churn(report, timings, n, k, max_moves, rel_tol=1e-3):
+    """Device-churn re-convergence: `rerun_incremental` (patched reach maps,
+    stale-row-only cache refresh, warm start from the previous stable
+    point) vs a cold start (fresh engine, full cache init, nearest-init
+    descent) on the same perturbed scenario.
+
+    Both timed sides may pay a one-off jit compile: the cold engine reuses
+    the base run's program only when the perturbed scenario's bucket widths
+    happen to match, and the warm side compiles the warm-init variant on
+    its first call — so the wall ratio is an end-to-end single-tick figure,
+    not a steady-state bound. The dominant term is move count either way
+    (cold re-descends from the nearest init, warm from the repaired
+    previous stable point). The parity gate at the end is the PR's
+    acceptance criterion: the warm-started stable point must be
+    bit-identical to a cold rebuild descending from the same repaired
+    assignment.
+    """
+    sc = make_large_scenario(n, k, seed=0)
+    tag = f"N{n}_K{k}"
+    eng = FastAssociationEngine(sc, kind="fast", seed=0, profile="coarse",
+                                rel_tol=rel_tol, compact="auto")
+    t0 = time.time()
+    base = eng.run("nearest", max_moves=max_moves, exchange_samples=0)
+    t_base = time.time() - t0
+    timings[f"churn_base_{tag.lower()}"] = t_base
+    report(f"assoc_scale/churn/{tag}_base_s", None, round(t_base, 3))
+    report(f"assoc_scale/churn/{tag}_base_moves", None, base.n_adjustments)
+
+    # 5% of devices drift, 2% get a reach flip, 2% depart — a mild mobility
+    # tick, the regime where re-solving from scratch is pure waste
+    sc2, delta = perturb_scenario(sc, seed=1, drift_m=60.0, move_frac=0.05,
+                                  flip_frac=0.02, depart_frac=0.02)
+    report(f"assoc_scale/churn/{tag}_delta_devices", None,
+           int(delta.touched_devices.sum()))
+    report(f"assoc_scale/churn/{tag}_stale_servers", None,
+           int(delta.stale_servers.sum()))
+
+    cold_eng = FastAssociationEngine(sc2, kind="fast", seed=0,
+                                     profile="coarse", rel_tol=rel_tol,
+                                     compact=eng.compact)
+    t0 = time.time()
+    cold = cold_eng.run("nearest", max_moves=max_moves, exchange_samples=0)
+    t_cold = time.time() - t0
+    timings[f"churn_cold_{tag.lower()}"] = t_cold
+    report(f"assoc_scale/churn/{tag}_cold_s", None, round(t_cold, 3))
+    report(f"assoc_scale/churn/{tag}_cold_moves", None, cold.n_adjustments)
+
+    t0 = time.time()
+    warm = eng.rerun_incremental(sc2, delta, max_moves=max_moves,
+                                 exchange_samples=0)
+    t_warm = time.time() - t0
+    timings[f"churn_warm_{tag.lower()}"] = t_warm
+    report(f"assoc_scale/churn/{tag}_warm_s", None, round(t_warm, 3))
+    report(f"assoc_scale/churn/{tag}_warm_moves", None, warm.n_adjustments)
+    speedup = t_cold / max(t_warm, 1e-9)
+    report(f"assoc_scale/churn/{tag}_wall_speedup", None, round(speedup, 2))
+    report(f"assoc_scale/churn/{tag}_cost_relgap", None,
+           f"{(warm.total_cost - cold.total_cost) / cold.total_cost:+.2e}")
+
+    # hard parity gate (untimed): cold rebuild from the SAME repaired start
+    parity = FastAssociationEngine(
+        sc2, kind="fast", seed=0, profile="coarse", rel_tol=rel_tol,
+        compact=eng.compact).run(assignment=eng.last_repaired_assignment,
+                                 max_moves=max_moves, exchange_samples=0)
+    assert np.array_equal(warm.assignment, parity.assignment), (
+        "warm-started churn stable point diverged from the cold rebuild")
+    assert warm.n_adjustments < cold.n_adjustments, (
+        "incremental rerun must re-converge in fewer moves than cold start")
+    report(f"assoc_scale/churn/{tag}_parity", None, True)
+    return {"base_s": t_base, "base_moves": base.n_adjustments,
+            "cold_s": t_cold, "cold_moves": cold.n_adjustments,
+            "warm_s": t_warm, "warm_moves": warm.n_adjustments,
+            "wall_speedup": speedup,
+            "moves_ratio": cold.n_adjustments / max(warm.n_adjustments, 1),
+            "touched_devices": int(delta.touched_devices.sum()),
+            "stale_servers": int(delta.stale_servers.sum()),
+            "compact": str(eng.compact), "rel_tol": rel_tol,
+            "warm_cost": warm.total_cost, "cold_cost": cold.total_cost,
+            "parity_ok": True}
+
+
 def run(report, quick: bool = False):
     t_start = time.time()
     timings: dict[str, float] = {}
@@ -243,7 +331,11 @@ def run(report, quick: bool = False):
         # both dispatch paths of the unified kernel (each is a single XLA
         # program, so compile cost stays in budget)
         sc = make_large_scenario(250, 10, seed=0)
-        eng = FastAssociationEngine(sc, kind="fast", seed=0, profile="coarse")
+        # explicit compact=True: "auto" now promotes this point to the
+        # bucketed sweep (padded fraction > threshold), and the quick gate
+        # below deliberately compares the FLAT sweep against the bucketed one
+        eng = FastAssociationEngine(sc, kind="fast", seed=0, profile="coarse",
+                                    compact=True)
         t0 = time.time()
         res = eng.run("nearest", max_moves=6, exchange_samples=0)
         dt = time.time() - t0
@@ -264,6 +356,18 @@ def run(report, quick: bool = False):
         # the smoke run, not print an informational line
         assert np.array_equal(res.assignment, bres.assignment), (
             "bucketed quick point diverged from the flat compact sweep")
+        # churn smoke: one incremental rerun with the verify gate ON, so
+        # quick mode exercises the warm-init dispatch + parity end to end
+        sc2, delta = perturb_scenario(sc, seed=1, drift_m=60.0,
+                                      move_frac=0.05, depart_frac=0.02)
+        t0 = time.time()
+        wres = eng.rerun_incremental(sc2, delta, max_moves=6,
+                                     exchange_samples=0, verify=True)
+        dt = time.time() - t0
+        timings["quick_churn_n250_k10"] = dt
+        report("assoc_scale/quick/N250_K10_churn_s", None, round(dt, 3))
+        report("assoc_scale/quick/N250_K10_churn_moves", None,
+               wres.n_adjustments)
     else:
         out["compaction"] = {
             "N1000_K20": _compaction(report, timings, 1000, 20, max_moves=6)}
@@ -278,6 +382,8 @@ def run(report, quick: bool = False):
         out["stress"] = {
             "N2000_K50": _stress(report, timings, 2000, 50,
                                  max_moves=4000, exchanges=0)}
+        out["churn"] = {
+            "N1000_K20": _churn(report, timings, 1000, 20, max_moves=2000)}
 
     report("assoc_scale/runtime_s", None, round(time.time() - t_start, 3))
     return out

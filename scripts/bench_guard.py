@@ -28,9 +28,10 @@ import os
 import sys
 
 # Timing keys that are legitimately one-sided on their first comparison:
-# benchmarks added by the bucketed (adaptive slot width) sweep. Matched by
-# substring against "section/key" names.
-EXPECTED_NEW_SUBSTRINGS = ("bucketed",)
+# benchmarks added by the bucketed (adaptive slot width) sweep and by the
+# churn (incremental re-convergence) regime. Matched by substring against
+# "section/key" names.
+EXPECTED_NEW_SUBSTRINGS = ("bucketed", "churn")
 
 
 def load_timings(path: str) -> dict[str, float] | None:

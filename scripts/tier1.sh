@@ -1,10 +1,21 @@
 #!/usr/bin/env bash
 # Tier-1 verification: run the FULL test suite. The seed_known_failure set
 # (tests/conftest.py) is empty since PR 3 fixed the 14 seed-snapshot jax
-# incompatibilities, so the marker filter below currently deselects nothing;
-# it stays as plumbing for any future environment-bound straggler. Extra
-# pytest arguments pass through, e.g. `scripts/tier1.sh tests/test_assoc_fast.py`.
+# incompatibilities, so that marker filter currently deselects nothing; it
+# stays as plumbing for any future environment-bound straggler.
+#
+#   scripts/tier1.sh            full tier-1 suite (the PR gate)
+#   scripts/tier1.sh --fast     developer loop: deselect the `slow`-marked
+#                               multi-minute association/launch tests
+#
+# Extra pytest arguments pass through, e.g.
+# `scripts/tier1.sh tests/test_assoc_fast.py`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+MARKER="not seed_known_failure"
+if [[ "${1:-}" == "--fast" ]]; then
+    MARKER="$MARKER and not slow"
+    shift
+fi
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-    python -m pytest -q -m "not seed_known_failure" "$@"
+    python -m pytest -q -m "$MARKER" "$@"

@@ -4,7 +4,8 @@ hierarchical aggregation, and update compression."""
 from repro.core.cost_model import (DeviceParams, LearningParams, RAConstants,
                                    ServerParams, global_cost, ra_constants,
                                    ra_objective)
-from repro.core.scenario import Scenario, make_large_scenario, make_scenario
+from repro.core.scenario import (Scenario, ScenarioDelta, make_large_scenario,
+                                 make_scenario, perturb_scenario)
 from repro.core.resource_allocation import (RASolution, beta_of_f, solve,
                                             solve_exact, solve_fixed_point,
                                             solve_paper, solve_reference)
@@ -19,7 +20,8 @@ from repro.core.compression import Int8Compressor, TopKCompressor
 __all__ = [
     "DeviceParams", "LearningParams", "RAConstants", "ServerParams",
     "global_cost", "ra_constants", "ra_objective",
-    "Scenario", "make_large_scenario", "make_scenario",
+    "Scenario", "ScenarioDelta", "make_large_scenario", "make_scenario",
+    "perturb_scenario",
     "RASolution", "beta_of_f", "solve", "solve_exact", "solve_fixed_point",
     "solve_paper", "solve_reference",
     "AssociationEngine", "AssociationResult", "FastAssociationEngine",

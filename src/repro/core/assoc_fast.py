@@ -110,10 +110,19 @@ from repro.core.cost_model import cloud_delay, cloud_energy, global_cost
 from repro.core.edge_association import (AssociationResult, GroupSolver,
                                          initial_assignment, solve_group)
 from repro.core.scenario import (ReachBuckets, ReachIndex, Scenario,
-                                 reach_index_map)
+                                 ScenarioDelta, reach_index_map,
+                                 update_reach_buckets, update_reach_index)
 
 _INF = jnp.inf
 _I32_BIG = np.iinfo(np.int32).max
+
+# ``compact="auto"`` promotes flat compaction to the bucketed adaptive-width
+# sweep when the flat map wastes more than this fraction of its slots on
+# padding. Measured (experiments/bench_results.json, assoc_scale/compaction):
+# at padded fraction 0.353 (N=1000/K=20) bucketed sweeps are 1.63x faster
+# per move than flat; near zero padding the per-bucket dispatch overhead
+# wins nothing, so the threshold sits between the two regimes.
+BUCKETED_AUTO_THRESHOLD = 0.25
 
 
 class _Bucket(NamedTuple):
@@ -147,8 +156,9 @@ def _bucket_cost_fn(kind, profile, bucket, cloud_const):
          static_argnames=("kind", "profile", "permission", "min_residual",
                           "max_moves", "exchange_samples"))
 def _run_device(member, assignment, key, buckets, ex_bucket, slot_of,
-                bucket_of, row_of, cloud_const, rel_tol, *, kind, profile,
-                permission, min_residual, max_moves, exchange_samples):
+                bucket_of, row_of, cloud_const, rel_tol, warm=None, *, kind,
+                profile, permission, min_residual, max_moves,
+                exchange_samples):
     """The whole adjustment loop as one device program — the single
     move-selection kernel behind every sweep space (dense / flat compact /
     bucketed; see module docstring).
@@ -160,6 +170,13 @@ def _run_device(member, assignment, key, buckets, ex_bucket, slot_of,
     K servers (rows = server ids) in which exchange candidates are priced —
     sampled exchange pairs hit arbitrary server pairs, so evaluating them in
     one shared slot space avoids solving every pair once per width bucket.
+
+    ``warm`` is ``None`` (cold start: every cache row is solved at init) or
+    ``(cur_prev (K,), toggles_prev per bucket, stale (K,) bool)`` — the
+    incremental-rerun path: rows of non-stale servers are copied from the
+    previous run's cache and only stale rows pay the R_b+1 group solves,
+    which is what makes re-convergence under small scenario deltas cheap.
+
     Returns (member, assignment, cur, toggles, n_moves, trace); ``trace[i]``
     is the surrogate total after move i (trace[0] = initial total), padded
     with NaN past ``n_moves``.
@@ -195,13 +212,27 @@ def _run_device(member, assignment, key, buckets, ex_bucket, slot_of,
 
     # ---- init: fill every bucket's toggle cache, one server at a time ----
     # (lax.map keeps peak memory at one server's (R_b+1, R_b) batch, which
-    # is what allows N=2000-scale scenarios on a single host.)
+    # is what allows N=2000-scale scenarios on a single host. On a warm
+    # start the per-row cond skips the solves for rows the delta left
+    # valid; the row still flows through the map so shapes never change.)
     cur0 = jnp.zeros(k, jnp.float32)
     toggles0 = []
     for b, bd in enumerate(buckets):
         kb = bd.idx.shape[0]
-        costs = lax.map(lambda rw, b=b: rows_costs(b, member, rw[None])[0],
-                        jnp.arange(kb, dtype=i32))             # (kb, rb+1)
+        if warm is None:
+            def row_fn(rw, b=b):
+                return rows_costs(b, member, rw[None])[0]
+        else:
+            cur_prev, toggles_prev, stale = warm
+
+            def row_fn(rw, b=b):
+                srv = buckets[b].servers[rw]
+                kept = jnp.concatenate([cur_prev[srv][None],
+                                        toggles_prev[b][rw]])
+                return lax.cond(stale[srv],
+                                lambda _: rows_costs(b, member, rw[None])[0],
+                                lambda _: kept, None)
+        costs = lax.map(row_fn, jnp.arange(kb, dtype=i32))     # (kb, rb+1)
         cur0 = cur0.at[bd.servers].set(costs[:, 0])
         toggles0.append(costs[:, 1:])
     toggles0 = tuple(toggles0)
@@ -410,7 +441,8 @@ class FastAssociationEngine:
         # comparable across screening profiles (the sweep may run coarser)
         self._eval_solver = self.solver.with_profile("default")
         self.rng = np.random.default_rng(seed)
-        self.avail = np.asarray(sc.avail)
+        self._active = sc.active_mask
+        self.avail = np.asarray(sc.eff_avail)
         self.cloud_const = jnp.asarray(
             np.asarray(sc.lp.lambda_e * cloud_energy(sc.srv)
                        + sc.lp.lambda_t * cloud_delay(sc.srv),
@@ -418,18 +450,40 @@ class FastAssociationEngine:
         self.reach: ReachIndex | None = None
         self.reach_buckets: ReachBuckets | None = None
         try:
-            self.reach = reach_index_map(self.avail)
+            self.reach = reach_index_map(np.asarray(sc.avail),
+                                         active=self._active)
         except ValueError:
             if compact in (True, "bucketed"):
                 raise
         if compact == "auto":
-            compact = (self.reach is not None
-                       and self.reach.r_max < sc.n_devices)
+            if self.reach is None or self.reach.r_max >= sc.n_devices:
+                compact = False
+            else:
+                # sparse reach -> compact; heavily padded flat maps (skewed
+                # reach counts) -> the bucketed adaptive-width sweep
+                compact = ("bucketed"
+                           if (self.reach.padded_fraction
+                               > BUCKETED_AUTO_THRESHOLD)
+                           else True)
         self.compact = "bucketed" if compact == "bucketed" else bool(compact)
-        k, n = sc.n_servers, sc.n_devices
         if self.compact == "bucketed":
-            rbk = reach_index_map(self.avail, bucketed=True)
-            self.reach_buckets = rbk
+            self.reach_buckets = reach_index_map(
+                np.asarray(sc.avail), bucketed=True, active=self._active)
+        self._rebuild_space()
+        self.last_state: dict | None = None   # debug: cur/toggle cache dump
+        self.last_tier_moves: list[int] | None = None
+        self._warm_cache: dict | None = None  # rerun_incremental state
+        self.last_repaired_assignment: np.ndarray | None = None
+
+    def _rebuild_space(self) -> None:
+        """(Re)derive the sweep-space buffers — per-bucket index maps with
+        pre-gathered constants plus the slot/bucket/row locators — from the
+        current ``self.reach``/``self.reach_buckets``/``self.avail``. Cheap
+        (pure gathers); the expensive state is the toggle cache, which
+        :meth:`rerun_incremental` preserves across calls to this."""
+        k, n = self.sc.n_servers, self.sc.n_devices
+        if self.compact == "bucketed":
+            rbk = self.reach_buckets
             self._buckets = tuple(
                 self._gather_bucket(b.servers, b.idx, b.valid, b.valid)
                 for b in rbk.buckets)
@@ -463,8 +517,6 @@ class FastAssociationEngine:
             self._bucket_of = jnp.zeros(k, jnp.int32)
             self._row_of = jnp.arange(k, dtype=jnp.int32)
             self._ex_bucket = self._buckets[0]
-        self.last_state: dict | None = None   # debug: cur/toggle cache dump
-        self.last_tier_moves: list[int] | None = None
 
     def _gather_bucket(self, servers, idx, exists, ok) -> _Bucket:
         """Pre-gather every per-device RA quantity into this bucket's
@@ -491,8 +543,7 @@ class FastAssociationEngine:
         one scale."""
         assignment = np.asarray(assignment)
         n, k = self.sc.n_devices, self.sc.n_servers
-        member = np.zeros((k, n), dtype=bool)
-        member[assignment, np.arange(n)] = True
+        member = self._member_of(assignment)
         sols = self._eval_solver.solve_batch(np.arange(k), member)
         return float(np.sum(np.asarray(sols.cost)
                             + np.where(member.any(axis=1),
@@ -554,22 +605,158 @@ class FastAssociationEngine:
         self.last_tier_moves = tier_moves
         return self._finalize(assignment, member, total_moves, trace)
 
+    def rerun_incremental(self, sc_new: Scenario, delta: ScenarioDelta, *,
+                          max_moves: int = 10_000, exchange_samples: int = 0,
+                          verify: bool = False) -> AssociationResult:
+        """Re-converge after a :func:`repro.core.scenario.perturb_scenario`
+        step WITHOUT rebuilding the expensive static state.
+
+        The engine mutates itself onto ``sc_new``: the reach slot-index maps
+        are patched in place (only overflowing buckets rebuild), the
+        previous stable assignment is repaired on the host (departures
+        leave their groups, arrivals and out-of-reach devices go to their
+        nearest effectively-reachable server), and the adjustment loop
+        restarts with the previous toggle-cost cache — only the rows of
+        servers the delta or the repair touched are re-solved at init. From
+        a near-stable warm start the descent needs a handful of moves where
+        a cold start needs hundreds.
+
+        The sweep runs at the profile that produced the cached rows (the
+        last ``run``/``run_tiered`` tier), since cache entries from another
+        profile would poison move selection. Chained deltas are supported:
+        each call refreshes the cache for the next.
+
+        ``verify=True`` is the hard parity gate: a cold engine is built on
+        ``sc_new`` and descended from the same repaired assignment, and the
+        two stable points must match bit-identically (raises otherwise).
+        It re-pays the full rebuild, so it is for tests/benchmarks, not for
+        the hot path.
+        """
+        if self._warm_cache is None:
+            raise RuntimeError(
+                "rerun_incremental needs a prior run()/run_tiered() on this "
+                "engine to warm-start from")
+        cache = self._warm_cache
+        profile = cache["profile"]
+        prev_assign = np.asarray(cache["assignment"])
+        old_active = self._active
+        n, k = self.sc.n_devices, self.sc.n_servers
+        if sc_new.n_devices != n or sc_new.n_servers != k:
+            raise ValueError("rerun_incremental requires fixed (N, K); "
+                             "churn uses the active mask, not resizing")
+
+        # ---- swap the scenario and patch the static index maps ----
+        self.sc = sc_new
+        self._active = sc_new.active_mask.copy()
+        self.avail = np.asarray(sc_new.eff_avail)
+        if delta.moved.any():
+            # distance-derived solver buffers (only the "proportional"
+            # scheme reads them; RA constants are delta-invariant)
+            inv = 1.0 / np.maximum(np.asarray(sc_new.dist), 1.0)
+            self.solver.inv_dist = jnp.asarray(inv.astype(np.float32))
+            self._eval_solver = self.solver.with_profile("default")
+        raw = np.asarray(sc_new.avail)
+        stale = np.asarray(delta.stale_servers, dtype=bool).copy()
+        carry: list = [0] * len(self._buckets)
+        if self.compact:
+            # the flat map backs the flat sweep AND the bucketed mode's
+            # shared exchange slot space; dense engines never read it after
+            # __init__'s auto decision, so it is dropped rather than left
+            # silently stale
+            self.reach, flat_rebuilt = update_reach_index(
+                self.reach, raw, active=self._active,
+                changed_servers=delta.stale_servers)
+        else:
+            self.reach = None
+        if self.compact == "bucketed":
+            self.reach_buckets, carry = update_reach_buckets(
+                self.reach_buckets, raw, active=self._active,
+                changed_servers=delta.stale_servers)
+        elif self.compact:
+            carry = [None] if flat_rebuilt else [0]
+        elif self.kind == "proportional" and delta.moved.any():
+            # dense toggle rows span every device, so a moved device's
+            # inv_dist change can touch any row's cached cost
+            stale[:] = True
+        self._rebuild_space()
+
+        # ---- repair the previous stable assignment on the host ----
+        dist = np.asarray(sc_new.dist)
+        parked = np.argmin(np.where(raw, dist, np.inf), axis=0)
+        eff_nearest = np.argmin(np.where(self.avail, dist, np.inf), axis=0)
+        departed = old_active & ~self._active
+        arrived = self._active & ~old_active
+        ok_now = self.avail[prev_assign, np.arange(n)]
+        displaced = self._active & ~ok_now
+        # groups losing a member (departures + displaced previous members)
+        stale[prev_assign[departed]] = True
+        stale[prev_assign[displaced & old_active]] = True
+        assign = prev_assign.copy()
+        assign[departed] = parked[departed]
+        assign[displaced] = eff_nearest[displaced]
+        # groups gaining a member (every arrival joins *some* group)
+        stale[assign[displaced]] = True
+        stale[assign[arrived]] = True
+
+        # ---- align cached toggle rows to the (possibly patched) layout ----
+        toggles_warm = []
+        for b, bd in enumerate(self._buckets):
+            shape = tuple(bd.idx.shape)
+            src = carry[b] if b < len(carry) else None
+            if src is None or cache["toggles"][src].shape != shape:
+                toggles_warm.append(jnp.zeros(shape, jnp.float32))
+                stale[np.asarray(bd.servers)] = True
+            else:
+                toggles_warm.append(jnp.asarray(cache["toggles"][src]))
+        warm = (jnp.asarray(cache["cur"]), tuple(toggles_warm),
+                jnp.asarray(stale))
+
+        self.last_repaired_assignment = assign.copy()
+        assignment, member, moves, trace = self._sweep(
+            assign, profile, max_moves, exchange_samples,
+            jax.random.PRNGKey(self.seed), warm=warm)
+        res = self._finalize(assignment, member, moves, trace)
+        if verify:
+            cold = FastAssociationEngine(
+                sc_new, kind=self.kind, permission=self.permission,
+                min_residual_group=self.min_residual, seed=self.seed,
+                rel_tol=self.rel_tol, profile=profile, compact=self.compact)
+            ref = cold.run(assignment=self.last_repaired_assignment,
+                           max_moves=max_moves,
+                           exchange_samples=exchange_samples)
+            if not np.array_equal(res.assignment, ref.assignment):
+                raise AssertionError(
+                    "incremental warm start diverged from the cold rebuild: "
+                    f"{int((res.assignment != ref.assignment).sum())} "
+                    "device placements differ")
+        return res
+
+    def _member_of(self, assignment: np.ndarray) -> np.ndarray:
+        """Dense (K, N) membership of an assignment, gated by the active
+        mask: inactive devices keep a parked bookkeeping slot in
+        ``assignment`` but belong to no group (and cost nothing)."""
+        n, k = self.sc.n_devices, self.sc.n_servers
+        member = np.zeros((k, n), dtype=bool)
+        act = self._active
+        member[assignment[act], np.flatnonzero(act)] = True
+        return member
+
     def _sweep(self, assignment: np.ndarray, profile: str, max_moves: int,
-               exchange_samples: int, key, rel_tol: float | None = None):
+               exchange_samples: int, key, rel_tol: float | None = None,
+               warm=None):
         """One profile's adjustment loop; returns (assignment, dense member,
         n_moves, trace) and stashes the cache dump in ``last_state``."""
         rel_tol = self.rel_tol if rel_tol is None else rel_tol
         assignment = np.asarray(assignment)
         n, k = self.sc.n_devices, self.sc.n_servers
-        member0 = np.zeros((k, n), dtype=bool)
-        member0[assignment, np.arange(n)] = True
+        member0 = self._member_of(assignment)
         if self.compact:
             # an out-of-reach assignment has no slot in compacted space: the
             # device would silently vanish from its group and the sweep's
             # slot_of gather would clamp to an unrelated device's toggle
             # cost, so reject it loudly (the dense path merely prices the
             # unreachable placement like the reference engine does)
-            unreachable = ~self.avail[assignment, np.arange(n)]
+            unreachable = self._active & ~self.avail[assignment, np.arange(n)]
             if unreachable.any():
                 bad = np.flatnonzero(unreachable)[:8]
                 raise ValueError(
@@ -579,7 +766,8 @@ class FastAssociationEngine:
         member, assign, cur, toggles, moves, trace = _run_device(
             jnp.asarray(member0), jnp.asarray(assignment, jnp.int32), key,
             self._buckets, self._ex_bucket, self._slot_of, self._bucket_of,
-            self._row_of, self.cloud_const, jnp.float32(rel_tol), kind=self.kind,
+            self._row_of, self.cloud_const, jnp.float32(rel_tol), warm,
+            kind=self.kind,
             profile=profile, permission=self.permission,
             min_residual=self.min_residual, max_moves=max_moves,
             exchange_samples=exchange_samples)
@@ -601,7 +789,16 @@ class FastAssociationEngine:
             self.last_state.update(toggle_cost=np.asarray(toggles[0]))
         moves = int(moves)
         trace = [float(x) for x in np.asarray(trace[:moves + 1], np.float64)]
-        return np.asarray(assign, np.int64), member, moves, trace
+        assign_np = np.asarray(assign, np.int64)
+        # stable-point cache for rerun_incremental: everything a warm start
+        # needs to skip the full toggle-cache init after a scenario delta
+        self._warm_cache = {
+            "assignment": assign_np.copy(),
+            "cur": np.asarray(cur, np.float32),
+            "toggles": [np.asarray(t) for t in toggles],
+            "profile": profile,
+        }
+        return assign_np, member, moves, trace
 
     def _finalize(self, assignment, member, moves, trace) -> AssociationResult:
         k = self.sc.n_servers
@@ -614,9 +811,18 @@ class FastAssociationEngine:
         total = float(np.sum(
             server_cost + np.where(masks.any(axis=1),
                                    np.asarray(self.cloud_const), 0.0)))
-        e, t, c = global_cost(self.sc.dev, self.sc.srv,
-                              jnp.asarray(assignment), jnp.asarray(f),
-                              jnp.asarray(np.maximum(beta, 1e-9)), self.sc.lp)
+        # true (15)-(17) costs are over the active population only: inactive
+        # devices hold no resources (f = beta = 0 in the masked sums above)
+        # and must not enter the per-device energy/delay terms
+        act = np.flatnonzero(self._active)
+        dev = self.sc.dev
+        if act.size < self.sc.n_devices:
+            dev = jax.tree.map(lambda x: x[act], dev)
+        e, t, c = global_cost(dev, self.sc.srv,
+                              jnp.asarray(np.asarray(assignment)[act]),
+                              jnp.asarray(np.asarray(f)[act]),
+                              jnp.asarray(np.maximum(np.asarray(beta)[act],
+                                                     1e-9)), self.sc.lp)
         return AssociationResult(
             assignment=assignment.copy(), f=f, beta=beta,
             server_cost=server_cost, total_cost=total,

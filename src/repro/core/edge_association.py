@@ -204,13 +204,25 @@ class GroupSolver:
 def initial_assignment(sc: Scenario, avail: np.ndarray, rng,
                        init: str = "nearest") -> np.ndarray:
     """Initial association (§II.C / Algorithm 3 line 2), shared by the host
-    and device engines so 'random' inits stay draw-for-draw identical."""
+    and device engines so 'random' inits stay draw-for-draw identical.
+
+    On churn scenarios (``sc.active`` set) only active devices draw a real
+    placement from ``avail`` (normally the *effective* availability);
+    inactive devices get a deterministic parked slot — nearest raw-reachable
+    server — that exists purely so the assignment array stays fixed-size
+    (they belong to no group and cost nothing).
+    """
+    active = sc.active_mask
+    out = np.empty(sc.n_devices, dtype=np.int64)
+    if not active.all():
+        raw = np.where(np.asarray(sc.avail), np.asarray(sc.dist), np.inf)
+        out[~active] = np.argmin(raw, axis=0)[~active]
     if init == "nearest":
         dist = np.where(avail, np.asarray(sc.dist), np.inf)
-        return np.argmin(dist, axis=0)
+        out[active] = np.argmin(dist, axis=0)[active]
+        return out
     if init == "random":
-        out = np.empty(sc.n_devices, dtype=np.int64)
-        for d in range(sc.n_devices):
+        for d in np.flatnonzero(active):
             out[d] = rng.choice(np.flatnonzero(avail[:, d]))
         return out
     raise ValueError(init)
@@ -244,7 +256,11 @@ class AssociationEngine:
         self.rel_tol = rel_tol
         self.rng = np.random.default_rng(seed)
         self._cache: dict[tuple[int, frozenset], float] = {}
-        self.avail = np.asarray(sc.avail)                     # (K, N)
+        # effective availability: on churn scenarios inactive devices can
+        # associate with no one, so they never become transfer/exchange
+        # candidates (and _groups_of keeps them out of every group)
+        self.avail = np.asarray(sc.eff_avail)                 # (K, N)
+        self._active = sc.active_mask
         self.cloud_const = np.asarray(
             sc.lp.lambda_e * cloud_energy(sc.srv)
             + sc.lp.lambda_t * cloud_delay(sc.srv), dtype=np.float64)
@@ -456,7 +472,9 @@ class AssociationEngine:
     # -- bookkeeping -----------------------------------------------------------
 
     def _groups_of(self, assignment) -> list[frozenset]:
-        return [frozenset(np.flatnonzero(assignment == i))
+        # inactive devices hold only a parked bookkeeping slot in
+        # ``assignment``; they belong to no group and cost nothing
+        return [frozenset(np.flatnonzero((assignment == i) & self._active))
                 for i in range(self.sc.n_servers)]
 
     def _total(self, groups) -> float:
@@ -472,9 +490,17 @@ class AssociationEngine:
         f = np.asarray(jnp.sum(jnp.where(masks, sols.f, 0.0), axis=0))
         beta = np.asarray(jnp.sum(jnp.where(masks, sols.beta, 0.0), axis=0))
         server_cost = np.asarray(sols.cost)
-        e, t, c = global_cost(self.sc.dev, self.sc.srv,
-                              jnp.asarray(assignment), jnp.asarray(f),
-                              jnp.asarray(np.maximum(beta, 1e-9)), self.sc.lp)
+        # true (15)-(17) costs span the active population only (inactive
+        # devices are in no group above, so their f/beta are zero)
+        act = np.flatnonzero(self._active)
+        dev = self.sc.dev
+        if act.size < self.sc.n_devices:
+            dev = jax.tree.map(lambda x: x[act], dev)
+        e, t, c = global_cost(dev, self.sc.srv,
+                              jnp.asarray(np.asarray(assignment)[act]),
+                              jnp.asarray(f[act]),
+                              jnp.asarray(np.maximum(beta[act], 1e-9)),
+                              self.sc.lp)
         return AssociationResult(
             assignment=assignment.copy(), f=f, beta=beta,
             server_cost=server_cost,

@@ -17,6 +17,7 @@ set-up). Table II values:
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -61,6 +62,7 @@ class ReachBucket:
     idx: np.ndarray        # (K_b, R_b) int32 device per slot (0-padded)
     valid: np.ndarray      # (K_b, R_b) bool — real slots
     width: int             # R_b = widest reach count in this bucket
+    key: int = -1          # binary magnitude ceil(log2(count)) of its servers
 
 
 @dataclass(frozen=True)
@@ -87,7 +89,24 @@ class ReachBuckets:
         return 1.0 - real / max(total, 1)
 
 
-def reach_index_map(avail: np.ndarray, *, bucketed: bool = False):
+def _fill_reach_row(reach: np.ndarray, idx_row: np.ndarray,
+                    valid_row: np.ndarray, slot_row: np.ndarray,
+                    sentinel: int) -> None:
+    """Write ONE server's compacted row in place — the ONE place slot
+    numbering / padding semantics live, shared by the from-scratch builder
+    and both incremental patchers: ascending device ids in the leading
+    slots (0-padded past the reach count), matching validity flags, and the
+    inverse slot map with ``sentinel`` marking out-of-reach devices."""
+    idx_row[:] = 0
+    valid_row[:] = False
+    idx_row[:reach.size] = reach
+    valid_row[:reach.size] = True
+    slot_row[:] = sentinel
+    slot_row[reach] = np.arange(reach.size, dtype=np.int32)
+
+
+def reach_index_map(avail: np.ndarray, *, bucketed: bool = False,
+                    active: np.ndarray | None = None):
     """Compute the compacted reachable-set index maps of ``avail`` (K, N).
 
     The fused candidate sweeps in :mod:`repro.core.assoc_fast` run in this
@@ -101,24 +120,30 @@ def reach_index_map(avail: np.ndarray, *, bucketed: bool = False):
     grouped by ``ceil(log2(reach_count))`` and each bucket is compacted at
     its own width, so one dense-reach server no longer pads every other
     server's row to the global max (see ``padded_fraction``).
+
+    ``active`` (N,) bool restricts the maps to the active device population
+    of a churn scenario: inactive devices occupy no slot anywhere (they can
+    never be candidates) and are exempt from the must-reach-one check.
     """
     avail = np.asarray(avail, dtype=bool)
-    if not avail.any(axis=0).all():
+    if active is not None:
+        avail = avail & np.asarray(active, dtype=bool)[None, :]
+    need_reach = (np.ones(avail.shape[1], bool) if active is None
+                  else np.asarray(active, dtype=bool))
+    if not avail.any(axis=0)[need_reach].all():
         raise ValueError("every device must reach at least one server")
     k, n = avail.shape
     counts = avail.sum(axis=1)
     r_max = int(counts.max()) if k else 0
 
     def fill(servers, width, slot):
-        """Fill one group's (idx, valid) rows and its servers' slot-map rows
-        — the ONE place slot numbering / padding semantics live."""
+        """Fill one group's (idx, valid) rows and its servers' slot-map
+        rows via :func:`_fill_reach_row`."""
         idx = np.zeros((len(servers), width), dtype=np.int32)
         valid = np.zeros((len(servers), width), dtype=bool)
         for row, srv in enumerate(servers):
-            reach = np.flatnonzero(avail[srv])
-            idx[row, :reach.size] = reach
-            valid[row, :reach.size] = True
-            slot[srv, reach] = np.arange(reach.size, dtype=np.int32)
+            _fill_reach_row(np.flatnonzero(avail[srv]), idx[row],
+                            valid[row], slot[srv], r_max)
         return idx, valid
 
     slot = np.full((k, n), r_max, dtype=np.int32)
@@ -139,7 +164,7 @@ def reach_index_map(avail: np.ndarray, *, bucketed: bool = False):
         bucket_of[servers] = b
         row_of[servers] = np.arange(servers.size, dtype=np.int32)
         buckets.append(ReachBucket(servers=servers, idx=idx, valid=valid,
-                                   width=width))
+                                   width=width, key=int(key)))
     return ReachBuckets(buckets=tuple(buckets), bucket_of=bucket_of,
                         row_of=row_of, slot=slot, r_max=r_max)
 
@@ -151,6 +176,14 @@ class Scenario:
     avail: np.ndarray            # (K, N) bool — device n can reach server i
     dist: np.ndarray             # (K, N) meters
     lp: LearningParams = field(default_factory=LearningParams)
+    # Dynamic-scenario state (device churn / mobility). ``active`` marks the
+    # devices currently present; ``None`` means everyone (the static case).
+    # Positions and the reach radius are kept so perturb_scenario can drift
+    # devices and recompute exactly the touched dist/avail columns.
+    active: np.ndarray | None = None     # (N,) bool, None == all active
+    dev_xy: np.ndarray | None = None     # (N, 2) meters
+    srv_xy: np.ndarray | None = None     # (K, 2) meters
+    reach_m: float | None = None
 
     @property
     def n_devices(self) -> int:
@@ -159,6 +192,281 @@ class Scenario:
     @property
     def n_servers(self) -> int:
         return self.srv.n_servers
+
+    @property
+    def active_mask(self) -> np.ndarray:
+        """(N,) bool — always materialized, all-True when ``active`` unset."""
+        if self.active is None:
+            return np.ones(self.n_devices, dtype=bool)
+        return np.asarray(self.active, dtype=bool)
+
+    @property
+    def eff_avail(self) -> np.ndarray:
+        """Effective availability: reachability restricted to active devices
+        (an inactive device can associate with no one)."""
+        if self.active is None:
+            return np.asarray(self.avail, dtype=bool)
+        return np.asarray(self.avail, dtype=bool) & self.active_mask[None, :]
+
+
+# ---------------------------------------------------------------------------
+# Dynamic scenarios: seeded perturbations + incremental reach maintenance
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ScenarioDelta:
+    """Record of one :func:`perturb_scenario` step — everything an
+    incremental consumer needs to patch static state instead of rebuilding.
+
+    ``stale_servers`` is the conservative invalidation set for per-server
+    caches keyed on the *scenario* (slot-index maps, gathered per-slot
+    constants, toggle-cost rows): every server whose effective reachable set
+    changed, plus every server reaching a moved device in the old or new
+    scenario (distance-derived quantities may differ even when reach did
+    not). Association-state invalidation (groups whose membership the warm
+    start repairs) is the consumer's to add on top.
+    """
+
+    seed: int
+    moved: np.ndarray          # (N,) bool — position (dist column) changed
+    arrived: np.ndarray        # (N,) bool — inactive -> active
+    departed: np.ndarray       # (N,) bool — active -> inactive
+    avail_flips: np.ndarray    # (K, N) bool — raw reachability bits flipped
+    eff_flips: np.ndarray      # (K, N) bool — effective (active-masked) flips
+    stale_servers: np.ndarray  # (K,) bool — see docstring
+
+    @property
+    def touched_devices(self) -> np.ndarray:
+        return (self.moved | self.arrived | self.departed
+                | self.avail_flips.any(axis=0))
+
+
+def perturb_scenario(sc: Scenario, *, seed: int, drift_m: float = 50.0,
+                     move_frac: float = 0.1, flip_frac: float = 0.0,
+                     depart_frac: float = 0.0, arrive_frac: float = 0.0
+                     ) -> tuple[Scenario, ScenarioDelta]:
+    """One seeded, deterministic churn step: device mobility (Gaussian
+    position drift re-deriving the touched dist/avail columns), per-device
+    reach flips (blockage: one random server bit per picked device), and
+    arrivals/departures via the ``active`` mask.
+
+    Device/server physical parameters (and hence every RA constant) are held
+    fixed — in particular the per-device channel gain, whose shadowing draw
+    dominates its within-area distance spread — so group costs change ONLY
+    through membership and reachability. That is the invariant incremental
+    consumers rely on: an unchanged group's cached cost stays valid across
+    the delta.
+
+    Fractions are of the eligible population (active for departures/moves/
+    flips, inactive for arrivals). Every active device is guaranteed at
+    least its nearest server after the step (constraint 17e repair), so
+    ``reach_index_map(new.avail, active=new.active)`` always succeeds.
+    Returns ``(new_scenario, delta)``; ``sc`` itself is not mutated.
+    """
+    if sc.dev_xy is None or sc.srv_xy is None or sc.reach_m is None:
+        raise ValueError(
+            "perturb_scenario needs positions and reach_m on the Scenario "
+            "(rebuild it with make_scenario/make_large_scenario)")
+    rng = np.random.default_rng(seed)
+    n, k = sc.n_devices, sc.n_servers
+    active_old = sc.active_mask
+    avail_old = np.asarray(sc.avail, dtype=bool)
+
+    def pick(mask: np.ndarray, frac: float) -> np.ndarray:
+        cand = np.flatnonzero(mask)
+        m = min(int(round(frac * cand.size)), cand.size)
+        out = np.zeros(n, dtype=bool)
+        if m:
+            out[rng.choice(cand, size=m, replace=False)] = True
+        return out
+
+    departed = pick(active_old, depart_frac)
+    arrived = pick(~active_old, arrive_frac)
+    active_new = (active_old & ~departed) | arrived
+
+    moved = pick(active_new, move_frac)
+    dev_xy = np.asarray(sc.dev_xy, dtype=float).copy()
+    dist = np.asarray(sc.dist, dtype=float).copy()
+    avail = avail_old.copy()
+    if moved.any():
+        dev_xy[moved] += rng.normal(0.0, drift_m,
+                                    size=(int(moved.sum()), 2))
+        dist[:, moved] = np.linalg.norm(
+            np.asarray(sc.srv_xy)[:, None, :] - dev_xy[None, moved, :],
+            axis=-1)
+        avail[:, moved] = dist[:, moved] <= sc.reach_m
+
+    flipped = pick(active_new, flip_frac)
+    if flipped.any():
+        cols = np.flatnonzero(flipped)
+        rows = rng.integers(0, k, cols.size)
+        avail[rows, cols] = ~avail[rows, cols]
+
+    nearest = np.argmin(dist, axis=0)
+    bad = active_new & ~avail.any(axis=0)
+    avail[nearest[bad], bad] = True
+
+    avail_flips = avail != avail_old
+    eff_flips = ((avail & active_new[None, :])
+                 != (avail_old & active_old[None, :]))
+    stale = eff_flips.any(axis=1)
+    if moved.any():
+        stale |= avail_old[:, moved].any(axis=1)
+        stale |= avail[:, moved].any(axis=1)
+
+    sc_new = dataclasses.replace(sc, avail=avail, dist=dist,
+                                 active=active_new, dev_xy=dev_xy)
+    delta = ScenarioDelta(seed=seed, moved=moved, arrived=arrived,
+                          departed=departed, avail_flips=avail_flips,
+                          eff_flips=eff_flips, stale_servers=stale)
+    return sc_new, delta
+
+
+def _changed_rows(eff: np.ndarray, row_sets: list[np.ndarray]) -> np.ndarray:
+    """Servers whose stored reachable set (``row_sets[s]`` = ascending device
+    ids) no longer matches ``eff[s]`` — the default delta detector when the
+    caller has no :class:`ScenarioDelta` at hand."""
+    out = np.zeros(eff.shape[0], dtype=bool)
+    for s in range(eff.shape[0]):
+        reach = np.flatnonzero(eff[s])
+        out[s] = (reach.size != row_sets[s].size
+                  or not np.array_equal(reach, row_sets[s]))
+    return out
+
+
+def update_reach_index(ri: ReachIndex, avail: np.ndarray, *,
+                       active: np.ndarray | None = None,
+                       changed_servers: np.ndarray | None = None
+                       ) -> tuple[ReachIndex, bool]:
+    """Incrementally patch a flat :class:`ReachIndex` across an availability
+    delta: changed servers' idx/valid/slot rows are rewritten at the map's
+    existing allocated width (kept even when the new max reach count is
+    smaller, so compiled shapes downstream survive); if any server's reach
+    count overflows the allocated width the map is rebuilt from scratch.
+
+    Returns ``(new_map, rebuilt)``. ``ri`` is not mutated.
+    """
+    eff = np.asarray(avail, dtype=bool)
+    if active is not None:
+        eff = eff & np.asarray(active, dtype=bool)[None, :]
+    k, n = eff.shape
+    counts = eff.sum(axis=1)
+    if k and int(counts.max()) > ri.r_max:
+        return reach_index_map(avail, active=active), True
+    if changed_servers is None:
+        changed_servers = _changed_rows(
+            eff, [ri.idx[s, ri.valid[s]] for s in range(k)])
+    idx, valid, slot = ri.idx.copy(), ri.valid.copy(), ri.slot.copy()
+    for s in np.flatnonzero(np.asarray(changed_servers, dtype=bool)):
+        _fill_reach_row(np.flatnonzero(eff[s]), idx[s], valid[s], slot[s],
+                        ri.r_max)
+    return ReachIndex(idx=idx, valid=valid, slot=slot, r_max=ri.r_max), False
+
+
+def update_reach_buckets(rbk: ReachBuckets, avail: np.ndarray, *,
+                         active: np.ndarray | None = None,
+                         changed_servers: np.ndarray | None = None
+                         ) -> tuple[ReachBuckets, list]:
+    """Incrementally maintain :class:`ReachBuckets` across an availability
+    delta.
+
+    A changed server whose reach count stays inside its bucket's binary
+    magnitude (same ``ceil(log2(count))`` key) and allocated width R_b gets
+    its idx/valid/slot rows patched; a server that overflows (key change, or
+    count beyond R_b) forces a rebuild of every bucket it leaves or joins —
+    and ONLY those. Untouched buckets keep their arrays, so per-bucket
+    compiled shapes and cached per-row state survive small deltas. The
+    out-of-reach sentinel only ever grows (``max(old r_max, new widths)``);
+    when it grows, stale sentinel entries in unchanged slot rows are
+    remapped, so ``slot < R_b`` tests stay sound everywhere.
+
+    Returns ``(new_rbk, carry)``: ``carry[b]`` is the old bucket index whose
+    (servers, width) layout new bucket ``b`` preserves — per-row caches
+    indexed by that layout stay aligned — or ``None`` for rebuilt buckets.
+    ``rbk`` is not mutated.
+    """
+    eff = np.asarray(avail, dtype=bool)
+    if active is not None:
+        eff = eff & np.asarray(active, dtype=bool)[None, :]
+    k, n = eff.shape
+    counts = eff.sum(axis=1)
+    keys_new = np.array([max(int(c) - 1, 0).bit_length() for c in counts])
+    if changed_servers is None:
+        sets = [None] * k
+        for b in rbk.buckets:
+            for row, srv in enumerate(b.servers):
+                sets[srv] = b.idx[row, b.valid[row]]
+        changed_servers = _changed_rows(eff, sets)
+    changed = np.flatnonzero(np.asarray(changed_servers, dtype=bool))
+
+    rebuild_keys: set[int] = set()
+    patch: list[int] = []
+    for s in changed:
+        bk = rbk.buckets[rbk.bucket_of[s]]
+        if int(keys_new[s]) == bk.key and int(counts[s]) <= bk.width:
+            patch.append(int(s))
+        else:
+            rebuild_keys.add(bk.key)
+            rebuild_keys.add(int(keys_new[s]))
+
+    members = {key: np.flatnonzero(keys_new == key).astype(np.int32)
+               for key in rebuild_keys}
+    new_widths = [max(int(counts[m].max()), 1)
+                  for m in members.values() if m.size]
+    sentinel = max([rbk.r_max] + new_widths)
+    slot = rbk.slot.copy()
+    if sentinel > rbk.r_max:
+        # valid slots are always < their bucket width <= the old sentinel,
+        # so entries equal to it are exactly the out-of-reach markers
+        slot[slot == rbk.r_max] = sentinel
+
+    def fill_rows(servers, width):
+        idx = np.zeros((len(servers), width), dtype=np.int32)
+        valid = np.zeros((len(servers), width), dtype=bool)
+        for row, srv in enumerate(servers):
+            _fill_reach_row(np.flatnonzero(eff[srv]), idx[row], valid[row],
+                            slot[srv], sentinel)
+        return idx, valid
+
+    new_buckets: list[ReachBucket] = []
+    carry: list = []
+    for ob, bk in enumerate(rbk.buckets):
+        if bk.key in rebuild_keys:
+            srvs = members[bk.key]
+            if srvs.size:
+                idx, valid = fill_rows(srvs, max(int(counts[srvs].max()), 1))
+                new_buckets.append(ReachBucket(
+                    servers=srvs, idx=idx, valid=valid,
+                    width=idx.shape[1], key=bk.key))
+                carry.append(None)
+            continue
+        in_bucket = [s for s in patch if rbk.bucket_of[s] == ob]
+        if in_bucket:
+            idx, valid = bk.idx.copy(), bk.valid.copy()
+            for s in in_bucket:
+                row = rbk.row_of[s]
+                _fill_reach_row(np.flatnonzero(eff[s]), idx[row],
+                                valid[row], slot[s], sentinel)
+            bk = ReachBucket(servers=bk.servers, idx=idx, valid=valid,
+                             width=bk.width, key=bk.key)
+        new_buckets.append(bk)
+        carry.append(ob)
+    existing = {b.key for b in rbk.buckets}
+    for key in sorted(rebuild_keys - existing):
+        srvs = members[key]
+        if srvs.size:
+            idx, valid = fill_rows(srvs, max(int(counts[srvs].max()), 1))
+            new_buckets.append(ReachBucket(servers=srvs, idx=idx, valid=valid,
+                                           width=idx.shape[1], key=key))
+            carry.append(None)
+
+    bucket_of = np.zeros(k, dtype=np.int32)
+    row_of = np.zeros(k, dtype=np.int32)
+    for b, bk in enumerate(new_buckets):
+        bucket_of[bk.servers] = b
+        row_of[bk.servers] = np.arange(bk.servers.size, dtype=np.int32)
+    return ReachBuckets(buckets=tuple(new_buckets), bucket_of=bucket_of,
+                        row_of=row_of, slot=slot, r_max=sentinel), carry
 
 
 def channel_gain_from_distance(dist_m: np.ndarray) -> np.ndarray:
@@ -254,4 +562,6 @@ def _assemble(rng: np.random.Generator, dev_xy: np.ndarray,
     avail[nearest[unreachable], unreachable] = True
 
     return Scenario(dev=dev, srv=srv, avail=avail, dist=dist,
-                    lp=lp or LearningParams())
+                    lp=lp or LearningParams(),
+                    dev_xy=dev_xy.copy(), srv_xy=srv_xy.copy(),
+                    reach_m=float(reach_m))

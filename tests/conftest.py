@@ -28,7 +28,10 @@ def pytest_configure(config):
         "seed_known_failure: test already failing in the seed snapshot; "
         "excluded by scripts/tier1.sh so tier-1 green/red is meaningful")
     config.addinivalue_line(
-        "markers", "slow: long-running launch/serve smoke test")
+        "markers",
+        "slow: multi-minute test (launch/serve smoke tests, large "
+        "association convergence runs); deselected by scripts/tier1.sh "
+        "--fast")
 
 
 def pytest_collection_modifyitems(config, items):

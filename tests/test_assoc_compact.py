@@ -39,6 +39,7 @@ def test_compact_parity_sparse_avail(n, k, seed):
     assert comp.n_adjustments == dense.n_adjustments
 
 
+@pytest.mark.slow
 def test_compact_pareto_permission_parity():
     """Pareto permission rule must gate identically in compacted space."""
     sc = make_scenario(12, 3, seed=7, reach_m=300.0)
@@ -58,6 +59,40 @@ def test_compact_auto_selection():
     sparse_sc = make_scenario(16, 4, seed=1, reach_m=300.0)
     assert not FastAssociationEngine(dense_sc, kind="fast", seed=0).compact
     assert FastAssociationEngine(sparse_sc, kind="fast", seed=0).compact
+
+
+@pytest.mark.slow
+def test_compact_auto_promotes_bucketed_on_padding():
+    """``compact="auto"`` must dispatch on the measured padded-slot
+    threshold: lightly padded flat maps stay flat, heavily padded (skewed
+    reach-count) maps promote to the bucketed adaptive-width sweep."""
+    from repro.core.assoc_fast import BUCKETED_AUTO_THRESHOLD
+
+    # clustered large scenario: skewed reach counts, pf ~ 0.32 > threshold
+    skewed = make_large_scenario(120, 8, seed=0)
+    pf_skewed = reach_index_map(skewed.avail).padded_fraction
+    assert pf_skewed > BUCKETED_AUTO_THRESHOLD
+    eng = FastAssociationEngine(skewed, kind="fast", seed=0, compact="auto")
+    assert eng.compact == "bucketed"
+    assert eng.reach_buckets is not None and len(eng._buckets) > 1
+
+    # uniform small scenario: sparse but barely padded, pf ~ 0.17
+    flat = make_scenario(16, 4, seed=1, reach_m=300.0)
+    pf_flat = reach_index_map(flat.avail).padded_fraction
+    assert pf_flat < BUCKETED_AUTO_THRESHOLD
+    eng = FastAssociationEngine(flat, kind="fast", seed=0, compact="auto")
+    assert eng.compact is True
+    assert eng.reach_buckets is None
+
+    # the auto choice must not change the stable point (it never can: all
+    # spaces share move selection) — spot-check against explicit flat
+    auto_res = FastAssociationEngine(
+        skewed, kind="fast", seed=0, profile="coarse").run(
+        "nearest", max_moves=8, exchange_samples=0)
+    flat_res = FastAssociationEngine(
+        skewed, kind="fast", seed=0, profile="coarse", compact=True).run(
+        "nearest", max_moves=8, exchange_samples=0)
+    assert np.array_equal(auto_res.assignment, flat_res.assignment)
 
 
 def test_compact_exchanges_applied_and_improve():
@@ -216,6 +251,7 @@ def test_bucketed_matches_flat_compact_stable_point(n, k, seed):
             <= 1e-4 * flat.total_cost)
 
 
+@pytest.mark.slow
 def test_bucketed_exchanges_and_availability():
     """The exchange branch must work across buckets: cost no worse than the
     transfers-only stable point and every placement stays within reach."""

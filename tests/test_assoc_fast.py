@@ -37,6 +37,7 @@ def test_parity_with_exchanges_not_worse():
     assert fast.total_cost <= ref.total_cost * 1.02
 
 
+@pytest.mark.slow
 def test_permission_semantics_match_reference_move_for_move():
     """Tiny fixture, no exchanges: the fast engine must replicate the
     reference engine's applied moves exactly under both permission rules."""

@@ -1,0 +1,136 @@
+"""scripts/bench_guard.py gates every PR's benchmark timings — cover its
+comparison semantics: one-sided sections/keys, expected-new labelling, the
+>max-ratio failure path, and the missing-file edge cases."""
+
+import importlib.util
+import json
+import pathlib
+import sys
+
+import pytest
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+_spec = importlib.util.spec_from_file_location(
+    "bench_guard", _ROOT / "scripts" / "bench_guard.py")
+bench_guard = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_guard)
+
+
+def _write(path, sections):
+    path.write_text(json.dumps(sections))
+    return str(path)
+
+
+def _run(monkeypatch, tmp_path, current, baseline, *extra):
+    argv = ["bench_guard.py"]
+    if current is not None:
+        argv += ["--current", _write(tmp_path / "cur.json", current)]
+    else:
+        argv += ["--current", str(tmp_path / "missing_cur.json")]
+    if baseline is not None:
+        argv += ["--baseline", _write(tmp_path / "prev.json", baseline)]
+    else:
+        argv += ["--baseline", str(tmp_path / "missing_prev.json")]
+    monkeypatch.setattr(sys, "argv", argv + list(extra))
+    return bench_guard.main()
+
+
+def test_load_timings_flattens_sections(tmp_path):
+    path = _write(tmp_path / "r.json", {
+        "assoc_scale": {"timings": {"a": 1.5, "b": 2.0}, "other": "x"},
+        "no_timings_section": {"cost": 3.0},
+        "scalar_section": 7,
+    })
+    assert bench_guard.load_timings(path) == {
+        "assoc_scale/a": 1.5, "assoc_scale/b": 2.0}
+    assert bench_guard.load_timings(str(tmp_path / "nope.json")) is None
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert bench_guard.load_timings(str(bad)) is None
+
+
+def test_ok_within_ratio(monkeypatch, tmp_path, capsys):
+    rc = _run(monkeypatch, tmp_path,
+              {"s": {"timings": {"k": 1.9}}},
+              {"s": {"timings": {"k": 1.0}}})
+    out = capsys.readouterr().out
+    assert rc == 0 and "bench_guard: OK" in out
+    assert "REGRESSION" not in out
+
+
+def test_regression_over_2x_fails(monkeypatch, tmp_path, capsys):
+    rc = _run(monkeypatch, tmp_path,
+              {"s": {"timings": {"k": 2.5, "fine": 1.0}}},
+              {"s": {"timings": {"k": 1.0, "fine": 1.0}}})
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "REGRESSION" in out and "s/k" in out
+    assert "FAIL" in out and "1 timing(s) regressed" in out
+
+
+def test_max_ratio_override(monkeypatch, tmp_path):
+    cur = {"s": {"timings": {"k": 2.5}}}
+    base = {"s": {"timings": {"k": 1.0}}}
+    assert _run(monkeypatch, tmp_path, cur, base, "--max-ratio", "3.0") == 0
+    assert _run(monkeypatch, tmp_path, cur, base, "--max-ratio", "1.5") == 1
+
+
+def test_one_sided_sections_and_keys_are_informational(monkeypatch, tmp_path,
+                                                       capsys):
+    """Newly added benchmarks must not fail the guard; retired ones are only
+    reported as removed."""
+    rc = _run(monkeypatch, tmp_path,
+              {"s": {"timings": {"shared": 1.0, "brand_new": 9.0}},
+               "new_section": {"timings": {"x": 50.0}}},
+              {"s": {"timings": {"shared": 1.0, "retired": 0.1}}})
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "new timings (no baseline): new_section/x, s/brand_new" in out
+    assert "removed timings (baseline only): s/retired" in out
+
+
+def test_expected_new_substrings_labelled(monkeypatch, tmp_path, capsys):
+    """Keys from the bucketed and churn benchmarks read as intentional
+    one-sided tolerance on their first run, not anonymous diffs."""
+    rc = _run(monkeypatch, tmp_path,
+              {"assoc_scale": {"timings": {"shared": 1.0,
+                                           "bucketed_permove": 0.5,
+                                           "churn_warm_n1000_k20": 30.0,
+                                           "misc_new": 2.0}}},
+              {"assoc_scale": {"timings": {"shared": 1.0}}})
+    out = capsys.readouterr().out
+    assert rc == 0
+    expected_line = [l for l in out.splitlines()
+                     if l.startswith("expected new timings")]
+    assert len(expected_line) == 1
+    assert "bucketed_permove" in expected_line[0]
+    assert "churn_warm_n1000_k20" in expected_line[0]
+    assert "misc_new" not in expected_line[0]
+    assert "new timings (no baseline): assoc_scale/misc_new" in out
+
+
+def test_missing_current_fails(monkeypatch, tmp_path, capsys):
+    rc = _run(monkeypatch, tmp_path, None, {"s": {"timings": {"k": 1.0}}})
+    assert rc == 1
+    assert "no current results" in capsys.readouterr().out
+
+
+def test_empty_current_timings_fails(monkeypatch, tmp_path, capsys):
+    rc = _run(monkeypatch, tmp_path, {"s": {"cost": 1.0}},
+              {"s": {"timings": {"k": 1.0}}})
+    assert rc == 1
+    assert "no timings" in capsys.readouterr().out
+
+
+def test_missing_baseline_passes_trivially(monkeypatch, tmp_path, capsys):
+    rc = _run(monkeypatch, tmp_path, {"s": {"timings": {"k": 1.0}}}, None)
+    assert rc == 0
+    assert "first run passes trivially" in capsys.readouterr().out
+
+
+def test_no_overlap_passes(monkeypatch, tmp_path, capsys):
+    rc = _run(monkeypatch, tmp_path,
+              {"a": {"timings": {"x": 1.0}}},
+              {"b": {"timings": {"y": 1.0}}})
+    assert rc == 0
+    assert "no overlapping timings" in capsys.readouterr().out

@@ -47,6 +47,7 @@ def test_pareto_permission_stricter_than_utilitarian():
     assert pa.n_adjustments <= ut.n_adjustments
 
 
+@pytest.mark.slow
 def test_hfel_beats_nonassociated_schemes():
     sc = make_scenario(20, 5, seed=4)
     hfel = evaluate_scheme(sc, "hfel", seed=0)
@@ -56,6 +57,7 @@ def test_hfel_beats_nonassociated_schemes():
     assert hfel.total_cost <= uni.total_cost * 1.001
 
 
+@pytest.mark.slow
 def test_scheme_zoo_runs():
     sc = make_scenario(12, 3, seed=5)
     for scheme in ["hfel", "random", "greedy", "comp_opt", "comm_opt",

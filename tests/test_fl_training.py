@@ -2,6 +2,7 @@
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.data import make_mnist_like
 from repro.fl import FederatedTrainer, train_federated
@@ -18,6 +19,7 @@ def test_hfel_equals_fedavg_when_one_edge_iter_one_server():
     np.testing.assert_allclose(h1.train_loss, h2.train_loss, rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_training_improves_and_hfel_leads_under_noniid():
     ds = make_mnist_like(20, seed=1)
     h_hfel = train_federated(ds, method="hfel", n_servers=4, rounds=12,
