@@ -1,0 +1,143 @@
+"""Live HFEL co-simulation benchmark (repro.fl.live): the three
+re-association policies on ONE churning scenario trajectory.
+
+The point under test is the ISSUE-5 acceptance criterion: on a churning
+N=250/K=10 scenario,
+
+  * ``incremental-warm`` and ``periodic-cold`` re-solve at the same swap
+    points from the same repaired stable assignment, so their swap
+    assignments are bit-identical and their cumulative eq.-(17) system
+    costs match to rel <= 1e-6 (asserted here, not just reported);
+  * ``incremental-warm`` spends measurably LESS association wall time than
+    ``periodic-cold`` (it patches reach maps and re-solves only stale
+    toggle-cache rows instead of rebuilding an engine per swap);
+  * both re-association policies beat the frozen ``static`` assignment on
+    cumulative cost (churn degrades a frozen association; that is the
+    paper's premise for running association and training as one system).
+
+Per-policy wall time and association-only time land in ``timings`` (all
+keys carry "live", labelled expected-new by scripts/bench_guard.py on
+their first comparison). Training hyper-parameters are deliberately small:
+the training side only has to be *present* (hot-swaps, masking, arrivals
+all exercised); its accuracy trend is tracked by the paper_training
+benchmarks, not this one.
+
+``quick=True`` smokes ``run_live`` end-to-end in under a minute: 2 rounds
+at N=40/K=4 with ``verify=True``, so the engine-level warm/cold parity
+assertion runs INSIDE the smoke as well.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.scenario import make_large_scenario
+from repro.data import make_mnist_like
+from repro.fl import run_live
+# the benchmark measures the library's own default per-round churn regime
+from repro.fl.live import DEFAULT_CHURN as CHURN
+
+POLICY_SLUGS = (("static", "static"), ("periodic-cold", "cold"),
+                ("incremental-warm", "warm"))
+
+
+def _run_policies(report, timings, *, n, k, rounds, resolve_every, seed=0):
+    sc = make_large_scenario(n, k, seed=seed)
+    ds = make_mnist_like(n, samples_total=3000, seed=seed)
+    tag = f"N{n}_K{k}"
+    out = {"n": n, "k": k, "rounds": rounds, "resolve_every": resolve_every,
+           "churn": dict(CHURN)}
+    hists = {}
+    for policy, slug in POLICY_SLUGS:
+        t0 = time.time()
+        h = run_live(sc, ds, policy=policy, rounds=rounds,
+                     resolve_every=resolve_every, churn=CHURN, seed=seed,
+                     local_iters=2, edge_iters=2, lr=0.05, eval_every=rounds,
+                     profile="coarse", rel_tol=1e-3)
+        wall = time.time() - t0
+        hists[policy] = h
+        timings[f"live_total_{slug}_{tag.lower()}"] = wall
+        timings[f"live_assoc_{slug}_{tag.lower()}"] = h.assoc_seconds_total
+        report(f"live_hfel/{tag}/{slug}_total_s", None, round(wall, 3))
+        report(f"live_hfel/{tag}/{slug}_assoc_s", None,
+               round(h.assoc_seconds_total, 3))
+        report(f"live_hfel/{tag}/{slug}_cum_cost", None,
+               round(h.cumulative_cost, 2))
+        report(f"live_hfel/{tag}/{slug}_moves", None, int(np.sum(h.moves)))
+        out[slug] = {"total_s": wall,
+                     "assoc_s": h.assoc_seconds_total,
+                     "assoc_seconds": [float(s) for s in h.assoc_seconds],
+                     "cumulative_cost": h.cumulative_cost,
+                     "system_cost": [float(c) for c in h.system_cost],
+                     "moves": [int(m) for m in h.moves],
+                     "swap_rounds": [int(r) for r in h.swap_rounds],
+                     "n_active": [int(a) for a in h.n_active],
+                     "final_test_acc": float(h.train.test_acc[-1])}
+
+    warm, cold, static = (hists["incremental-warm"], hists["periodic-cold"],
+                          hists["static"])
+    # -- acceptance gates (hard asserts: a silent miss must fail the run) --
+    assert warm.swap_rounds == cold.swap_rounds, "swap schedules diverged"
+    for r, aw, ac in zip(warm.swap_rounds, warm.swap_assignments,
+                         cold.swap_assignments):
+        assert np.array_equal(aw, ac), (
+            f"warm/cold swap assignments diverged at round {r}")
+    cost_rel = (abs(warm.cumulative_cost - cold.cumulative_cost)
+                / cold.cumulative_cost)
+    assert cost_rel <= 1e-6, f"warm/cold cumulative cost relgap {cost_rel:.2e}"
+    assert warm.assoc_seconds_total < cold.assoc_seconds_total, (
+        "incremental-warm must spend less association wall time than "
+        "periodic-cold")
+    assert warm.cumulative_cost <= static.cumulative_cost * (1 + 1e-9), (
+        "incremental-warm must beat the static assignment on cumulative cost")
+    assert cold.cumulative_cost <= static.cumulative_cost * (1 + 1e-9), (
+        "periodic-cold must beat the static assignment on cumulative cost")
+
+    assoc_speedup = cold.assoc_seconds_total / max(
+        warm.assoc_seconds_total, 1e-9)
+    static_gain = (static.cumulative_cost - warm.cumulative_cost) \
+        / static.cumulative_cost
+    report(f"live_hfel/{tag}/warm_cold_cost_relgap", None, f"{cost_rel:.2e}")
+    report(f"live_hfel/{tag}/warm_vs_cold_assoc_speedup", None,
+           round(assoc_speedup, 2))
+    report(f"live_hfel/{tag}/reassoc_cost_gain_vs_static", None,
+           f"{static_gain:+.4f}")
+    report(f"live_hfel/{tag}/parity", None, True)
+    out.update(warm_cold_cost_relgap=cost_rel, parity_ok=True,
+               warm_vs_cold_assoc_speedup=assoc_speedup,
+               reassoc_cost_gain_vs_static=static_gain)
+    return out
+
+
+def run(report, quick: bool = False):
+    t_start = time.time()
+    timings: dict[str, float] = {}
+    out: dict = {"timings": timings, "quick": quick}
+
+    if quick:
+        # smoke: 2 rounds, warm policy, engine-level verify ON (each warm
+        # re-solve is parity-checked against a cold rebuild inside)
+        sc = make_large_scenario(40, 4, seed=0)
+        ds = make_mnist_like(40, samples_total=800, seed=0)
+        t0 = time.time()
+        h = run_live(sc, ds, policy="incremental-warm", rounds=2,
+                     resolve_every=1, churn=CHURN, seed=0, local_iters=1,
+                     edge_iters=1, profile="coarse", rel_tol=1e-3,
+                     verify=True)
+        dt = time.time() - t0
+        timings["live_quick_n40_k4"] = dt
+        report("live_hfel/quick/N40_K4_s", None, round(dt, 3))
+        report("live_hfel/quick/N40_K4_cum_cost", None,
+               round(h.cumulative_cost, 2))
+        report("live_hfel/quick/N40_K4_swaps", None, len(h.swap_rounds))
+        assert sum(h.swapped) == 2 and h.rounds == 2
+        out["quick_smoke"] = {"seconds": dt, "rounds": h.rounds,
+                              "cumulative_cost": h.cumulative_cost}
+    else:
+        out["N250_K10"] = _run_policies(report, timings, n=250, k=10,
+                                        rounds=8, resolve_every=2)
+
+    report("live_hfel/runtime_s", None, round(time.time() - t_start, 3))
+    return out

@@ -24,14 +24,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: cost,convergence,training,"
-                         "local_iters,kernels,roofline,assoc_scale")
+                         "local_iters,kernels,roofline,assoc_scale,"
+                         "live_hfel")
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--quick", action="store_true",
                     help="smoke mode: shrink the assoc_scale stress points "
-                         "(skips the multi-minute N>=1000 runs) so the "
-                         "section finishes in under a minute; quick results "
-                         "are printed but NOT persisted, so bench_guard "
-                         "baselines are never disturbed")
+                         "(skips the multi-minute N>=1000 runs) and swap "
+                         "live_hfel's full three-policy run for a 2-round "
+                         "verify-on smoke, so each section finishes in "
+                         "under a minute; quick results are printed but NOT "
+                         "persisted, so bench_guard baselines are never "
+                         "disturbed")
     args = ap.parse_args()
 
     results = {}
@@ -62,6 +65,9 @@ def main() -> None:
                                        fromlist=["run"]).run(report),
         "assoc_scale": lambda: __import__(
             "benchmarks.assoc_scale",
+            fromlist=["run"]).run(report, quick=args.quick),
+        "live_hfel": lambda: __import__(
+            "benchmarks.live_hfel",
             fromlist=["run"]).run(report, quick=args.quick),
     }
     chosen = (args.only.split(",") if args.only else list(sections))

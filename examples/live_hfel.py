@@ -1,0 +1,58 @@
+"""Live HFEL co-simulation walkthrough: federated training while the device
+population churns, with elastic edge re-association between cloud rounds.
+
+    PYTHONPATH=src python examples/live_hfel.py
+
+Three policies face the SAME churn trajectory (mobility drift, reach flips,
+departures, arrivals — seeded per round):
+
+  static            round-0 association frozen; only feasibility repair
+  periodic-cold     re-solve from scratch every 2 rounds
+  incremental-warm  FastAssociationEngine.rerun_incremental every 2 rounds
+                    (patched reach maps, stale-row-only cache refresh)
+
+incremental-warm and periodic-cold land on bit-identical assignments at
+every swap (same repaired start, same descent) — the warm one just gets
+there faster — and both undercut static on cumulative eq.-17 system cost.
+"""
+
+import numpy as np
+
+from repro.core.scenario import make_large_scenario
+from repro.data import make_mnist_like
+from repro.fl import run_live
+
+N, K, ROUNDS = 40, 4, 6
+sc = make_large_scenario(N, K, seed=0)
+ds = make_mnist_like(N, samples_total=800, seed=0)
+churn = dict(drift_m=60.0, move_frac=0.1, flip_frac=0.05, depart_frac=0.08,
+             arrive_frac=0.4)
+
+hist = {}
+for policy in ("static", "periodic-cold", "incremental-warm"):
+    hist[policy] = run_live(sc, ds, policy=policy, rounds=ROUNDS,
+                            resolve_every=2, churn=churn, seed=0,
+                            local_iters=3, edge_iters=2, lr=0.05,
+                            profile="coarse", rel_tol=1e-3)
+
+warm = hist["incremental-warm"]
+print(f"\nround-by-round ({warm.policy}):")
+print("  r  active  swap  moves  assoc_s   eq17 cost")
+for r in range(ROUNDS):
+    print(f"  {r}  {warm.n_active[r]:>5}  {str(warm.swapped[r]):>5}"
+          f"  {warm.moves[r]:>5}  {warm.assoc_seconds[r]:>7.2f}"
+          f"  {warm.system_cost[r]:>10.2f}")
+
+print("\npolicy comparison (same churn trajectory):")
+print("  policy            cum eq17 cost   assoc s   final acc")
+for name, h in hist.items():
+    print(f"  {name:<17} {h.cumulative_cost:>13.2f}"
+          f"  {h.assoc_seconds_total:>8.2f}"
+          f"  {h.train.test_acc[-1]:>9.3f}")
+
+cold = hist["periodic-cold"]
+same = all(np.array_equal(a, b) for a, b in
+           zip(warm.swap_assignments, cold.swap_assignments))
+print(f"\nwarm/cold swap assignments bit-identical: {same}")
+print("cumulative-cost gain over static: "
+      f"{hist['static'].cumulative_cost - warm.cumulative_cost:+.2f}")

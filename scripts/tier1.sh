@@ -8,6 +8,13 @@
 #   scripts/tier1.sh --fast     developer loop: deselect the `slow`-marked
 #                               multi-minute association/launch tests
 #
+# Marker hygiene (tests/_marker_hygiene.py): tier-1 exports
+# TIER1_SLOW_MARKER_LIMIT_S (default 30) so any unmarked test that crosses
+# the limit FAILS — the fast tier stays fast as the suite grows. Unknown
+# markers fail collection via --strict-markers, and --durations prints the
+# slowest tests so creep is visible before it crosses the limit. Override
+# the limit (or disable with 0) by exporting the variable yourself.
+#
 # Extra pytest arguments pass through, e.g.
 # `scripts/tier1.sh tests/test_assoc_fast.py`.
 set -euo pipefail
@@ -17,5 +24,6 @@ if [[ "${1:-}" == "--fast" ]]; then
     MARKER="$MARKER and not slow"
     shift
 fi
+export TIER1_SLOW_MARKER_LIMIT_S="${TIER1_SLOW_MARKER_LIMIT_S:-30}"
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-    python -m pytest -q -m "$MARKER" "$@"
+    python -m pytest -q -m "$MARKER" --strict-markers --durations=15 "$@"

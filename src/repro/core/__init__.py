@@ -4,15 +4,18 @@ hierarchical aggregation, and update compression."""
 from repro.core.cost_model import (DeviceParams, LearningParams, RAConstants,
                                    ServerParams, global_cost, ra_constants,
                                    ra_objective)
-from repro.core.scenario import (Scenario, ScenarioDelta, make_large_scenario,
-                                 make_scenario, perturb_scenario)
+from repro.core.scenario import (DeviceClientBridge, Scenario, ScenarioDelta,
+                                 device_client_bridge, diff_scenarios,
+                                 make_large_scenario, make_scenario,
+                                 perturb_scenario)
 from repro.core.resource_allocation import (RASolution, beta_of_f, solve,
                                             solve_exact, solve_fixed_point,
                                             solve_paper, solve_reference)
 from repro.core.edge_association import (AssociationEngine, AssociationResult,
                                          GroupSolver, evaluate_scheme,
                                          solve_group)
-from repro.core.assoc_fast import FastAssociationEngine
+from repro.core.assoc_fast import (FastAssociationEngine,
+                                   assignment_true_cost, repair_assignment)
 from repro.core.hierarchy import (SyncLevel, SyncSchedule, cloud_aggregate,
                                   edge_aggregate, hierarchical_sync, psum_mean)
 from repro.core.compression import Int8Compressor, TopKCompressor
@@ -20,12 +23,14 @@ from repro.core.compression import Int8Compressor, TopKCompressor
 __all__ = [
     "DeviceParams", "LearningParams", "RAConstants", "ServerParams",
     "global_cost", "ra_constants", "ra_objective",
-    "Scenario", "ScenarioDelta", "make_large_scenario", "make_scenario",
-    "perturb_scenario",
+    "DeviceClientBridge", "Scenario", "ScenarioDelta",
+    "device_client_bridge", "diff_scenarios", "make_large_scenario",
+    "make_scenario", "perturb_scenario",
     "RASolution", "beta_of_f", "solve", "solve_exact", "solve_fixed_point",
     "solve_paper", "solve_reference",
     "AssociationEngine", "AssociationResult", "FastAssociationEngine",
-    "GroupSolver", "evaluate_scheme", "solve_group",
+    "GroupSolver", "assignment_true_cost", "evaluate_scheme",
+    "repair_assignment", "solve_group",
     "SyncLevel", "SyncSchedule", "cloud_aggregate", "edge_aggregate",
     "hierarchical_sync", "psum_mean",
     "Int8Compressor", "TopKCompressor",

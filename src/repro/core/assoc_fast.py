@@ -402,6 +402,118 @@ def _run_device(member, assignment, key, buckets, ex_bucket, slot_of,
     return member, assignment, cur, toggles, moves, trace
 
 
+def _dense_member(assignment: np.ndarray, active: np.ndarray,
+                  n_servers: int) -> np.ndarray:
+    """Dense (K, N) membership of an assignment, gated by the active mask:
+    inactive devices keep a parked bookkeeping slot in ``assignment`` but
+    belong to no group (and cost nothing)."""
+    member = np.zeros((n_servers, assignment.shape[0]), dtype=bool)
+    act = np.asarray(active, dtype=bool)
+    member[np.asarray(assignment)[act], np.flatnonzero(act)] = True
+    return member
+
+
+def _true_cost_terms(sc: Scenario, active: np.ndarray, assignment: np.ndarray,
+                     f: np.ndarray, beta: np.ndarray
+                     ) -> tuple[float, float, float]:
+    """Eqs. (15)-(17) over the ACTIVE population only: inactive devices hold
+    no resources and must not enter the per-device energy/delay terms. A
+    fully-departed population has nothing training or transmitting, so its
+    round costs (0, 0, 0) — a degenerate value, not an error, because churn
+    can legitimately empty a small scenario mid-simulation and the live loop
+    must record the round and keep going."""
+    act = np.flatnonzero(np.asarray(active, dtype=bool))
+    dev = sc.dev
+    if act.size == 0:
+        return 0.0, 0.0, 0.0
+    if act.size < sc.n_devices:
+        dev = jax.tree.map(lambda x: x[act], dev)
+    e, t, c = global_cost(dev, sc.srv, jnp.asarray(np.asarray(assignment)[act]),
+                          jnp.asarray(np.asarray(f)[act]),
+                          jnp.asarray(np.maximum(np.asarray(beta)[act],
+                                                 1e-9)), sc.lp)
+    return float(e), float(t), float(c)
+
+
+def assignment_true_cost(sc: Scenario, assignment: np.ndarray, *,
+                         solver: GroupSolver | None = None,
+                         kind: str = "fast", seed: int = 0
+                         ) -> tuple[float, float, float]:
+    """Paper eqs. (15)-(17) ``(energy, delay, cost)`` of an explicit
+    assignment on ``sc`` at reference RA accuracy, gated by the scenario's
+    active mask — the per-round system-cost accounting of the live
+    co-simulation (:mod:`repro.fl.live`), usable without building a full
+    association engine (the ``static`` policy never sweeps).
+
+    ``solver`` may be a prebuilt default-profile :class:`GroupSolver` to
+    amortize the RA-constants build across rounds: device/server physical
+    parameters are churn-invariant (the :func:`perturb_scenario` contract),
+    so one solver stays valid across mobility ticks for every scheme except
+    ``proportional`` (whose inverse-distance draws follow ``sc.dist``; pass
+    a fresh solver per tick for that kind).
+    """
+    if solver is None:
+        solver = GroupSolver(sc, kind, seed=seed, profile="default")
+    elif solver.kind != kind:
+        raise ValueError(
+            f"prebuilt solver was built for kind={solver.kind!r}, "
+            f"not {kind!r}")
+    else:
+        # the documented contract is reference accuracy: a screening-profile
+        # solver (e.g. an engine's own coarse sweep solver) is viewed at the
+        # default profile — with_profile shares constants, so this is free.
+        # (``seed`` only matters when building; a prebuilt solver keeps its
+        # own random_f draws for the fixed-f scheme kinds.)
+        solver = solver.with_profile("default")
+    assignment = np.asarray(assignment)
+    active = sc.active_mask
+    member = _dense_member(assignment, active, sc.n_servers)
+    sols = solver.solve_batch(np.arange(sc.n_servers), member)
+    jm = jnp.asarray(member)
+    f = np.asarray(jnp.sum(jnp.where(jm, sols.f, 0.0), axis=0))
+    beta = np.asarray(jnp.sum(jnp.where(jm, sols.beta, 0.0), axis=0))
+    return _true_cost_terms(sc, active, assignment, f, beta)
+
+
+def repair_assignment(sc_new: Scenario, prev_assign: np.ndarray,
+                      old_active: np.ndarray
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                 np.ndarray]:
+    """Repair a previous stable assignment onto a churned scenario — the ONE
+    place the repair rules live, shared by ``rerun_incremental`` (warm path)
+    and any cold re-solve that must be bit-comparable with it (the live
+    loop's ``periodic-cold`` policy descends a fresh engine from exactly
+    this repaired start, which is what makes the PR-4 warm/cold parity gate
+    apply at every swap point).
+
+    Rules: departures (active -> inactive) park at their nearest raw-reachable
+    server; active devices whose previous server is no longer effectively
+    reachable (arrivals holding a parked slot included, when that slot went
+    out of reach) move to their nearest effectively-reachable server;
+    everyone else keeps their slot.
+
+    Returns ``(assignment, departed, arrived, displaced)`` — the masks the
+    caller needs for cache invalidation and trainer-state repair.
+    """
+    prev_assign = np.asarray(prev_assign)
+    n = sc_new.n_devices
+    raw = np.asarray(sc_new.avail)
+    dist = np.asarray(sc_new.dist)
+    eff = np.asarray(sc_new.eff_avail)
+    active = sc_new.active_mask
+    old_active = np.asarray(old_active, dtype=bool)
+    parked = np.argmin(np.where(raw, dist, np.inf), axis=0)
+    eff_nearest = np.argmin(np.where(eff, dist, np.inf), axis=0)
+    departed = old_active & ~active
+    arrived = active & ~old_active
+    ok_now = eff[prev_assign, np.arange(n)]
+    displaced = active & ~ok_now
+    assign = prev_assign.copy()
+    assign[departed] = parked[departed]
+    assign[displaced] = eff_nearest[displaced]
+    return assign, departed, arrived, displaced
+
+
 class FastAssociationEngine:
     """Drop-in fast engine: same semantics as ``AssociationEngine.run_batched``
     (steepest permitted transfer per round, best sampled exchange when no
@@ -472,6 +584,7 @@ class FastAssociationEngine:
         self._rebuild_space()
         self.last_state: dict | None = None   # debug: cur/toggle cache dump
         self.last_tier_moves: list[int] | None = None
+        self.last_moves: int | None = None    # applied moves of the last sweep
         self._warm_cache: dict | None = None  # rerun_incremental state
         self.last_repaired_assignment: np.ndarray | None = None
 
@@ -551,12 +664,23 @@ class FastAssociationEngine:
 
     def run(self, init: str = "nearest", *, max_moves: int = 10_000,
             exchange_samples: int = 64,
-            assignment: np.ndarray | None = None) -> AssociationResult:
+            assignment: np.ndarray | None = None, finalize: bool = True):
+        """One adjustment-loop descent to the stable point.
+
+        ``finalize=False`` mirrors :meth:`rerun_incremental`'s fast path: it
+        skips the reference-accuracy ``_finalize`` evaluation and returns
+        just the (N,) stable assignment (read ``last_moves`` /
+        ``stable_assignment`` for the rest) — so cold and warm re-solves can
+        be timed symmetrically, with cost accounting on the caller's
+        schedule.
+        """
         assignment = (self.initial_assignment(init) if assignment is None
                       else np.asarray(assignment))
         assignment, member, moves, trace = self._sweep(
             assignment, self.profile, max_moves, exchange_samples,
             jax.random.PRNGKey(self.seed))
+        if not finalize:
+            return assignment.copy()
         return self._finalize(assignment, member, moves, trace)
 
     def run_tiered(self, init: str = "nearest", *,
@@ -607,7 +731,7 @@ class FastAssociationEngine:
 
     def rerun_incremental(self, sc_new: Scenario, delta: ScenarioDelta, *,
                           max_moves: int = 10_000, exchange_samples: int = 0,
-                          verify: bool = False) -> AssociationResult:
+                          verify: bool = False, finalize: bool = True):
         """Re-converge after a :func:`repro.core.scenario.perturb_scenario`
         step WITHOUT rebuilding the expensive static state.
 
@@ -631,6 +755,17 @@ class FastAssociationEngine:
         two stable points must match bit-identically (raises otherwise).
         It re-pays the full rebuild, so it is for tests/benchmarks, not for
         the hot path.
+
+        ``finalize=False`` is the non-verifying fast path for per-round use
+        (the live co-simulation's hot loop): it skips the reference-accuracy
+        ``_finalize`` evaluation — which costs a full default-profile
+        ``solve_batch`` — and returns just the (N,) stable assignment.
+        The stable-point cache is refreshed either way, so the next
+        ``rerun_incremental`` warm-starts identically, and the assignment
+        stays readable afterwards via :attr:`stable_assignment`. System-cost
+        accounting then happens separately (e.g. via
+        :func:`assignment_true_cost`), on the caller's schedule rather than
+        once per re-solve.
         """
         if self._warm_cache is None:
             raise RuntimeError(
@@ -681,19 +816,11 @@ class FastAssociationEngine:
         self._rebuild_space()
 
         # ---- repair the previous stable assignment on the host ----
-        dist = np.asarray(sc_new.dist)
-        parked = np.argmin(np.where(raw, dist, np.inf), axis=0)
-        eff_nearest = np.argmin(np.where(self.avail, dist, np.inf), axis=0)
-        departed = old_active & ~self._active
-        arrived = self._active & ~old_active
-        ok_now = self.avail[prev_assign, np.arange(n)]
-        displaced = self._active & ~ok_now
+        assign, departed, arrived, displaced = repair_assignment(
+            sc_new, prev_assign, old_active)
         # groups losing a member (departures + displaced previous members)
         stale[prev_assign[departed]] = True
         stale[prev_assign[displaced & old_active]] = True
-        assign = prev_assign.copy()
-        assign[departed] = parked[departed]
-        assign[displaced] = eff_nearest[displaced]
         # groups gaining a member (every arrival joins *some* group)
         stale[assign[displaced]] = True
         stale[assign[arrived]] = True
@@ -715,7 +842,6 @@ class FastAssociationEngine:
         assignment, member, moves, trace = self._sweep(
             assign, profile, max_moves, exchange_samples,
             jax.random.PRNGKey(self.seed), warm=warm)
-        res = self._finalize(assignment, member, moves, trace)
         if verify:
             cold = FastAssociationEngine(
                 sc_new, kind=self.kind, permission=self.permission,
@@ -723,23 +849,30 @@ class FastAssociationEngine:
                 rel_tol=self.rel_tol, profile=profile, compact=self.compact)
             ref = cold.run(assignment=self.last_repaired_assignment,
                            max_moves=max_moves,
-                           exchange_samples=exchange_samples)
-            if not np.array_equal(res.assignment, ref.assignment):
+                           exchange_samples=exchange_samples, finalize=False)
+            if not np.array_equal(assignment, ref):
                 raise AssertionError(
                     "incremental warm start diverged from the cold rebuild: "
-                    f"{int((res.assignment != ref.assignment).sum())} "
+                    f"{int((assignment != ref).sum())} "
                     "device placements differ")
-        return res
+        if not finalize:
+            return assignment.copy()
+        return self._finalize(assignment, member, moves, trace)
+
+    @property
+    def stable_assignment(self) -> np.ndarray | None:
+        """The most recent stable-point assignment (parked slots included),
+        readable after any ``run``/``run_tiered``/``rerun_incremental``
+        without holding on to result objects — the handoff surface for
+        external drivers polling the engine between re-solves. ``None``
+        before the first run."""
+        if self._warm_cache is None:
+            return None
+        return np.asarray(self._warm_cache["assignment"]).copy()
 
     def _member_of(self, assignment: np.ndarray) -> np.ndarray:
-        """Dense (K, N) membership of an assignment, gated by the active
-        mask: inactive devices keep a parked bookkeeping slot in
-        ``assignment`` but belong to no group (and cost nothing)."""
-        n, k = self.sc.n_devices, self.sc.n_servers
-        member = np.zeros((k, n), dtype=bool)
-        act = self._active
-        member[assignment[act], np.flatnonzero(act)] = True
-        return member
+        return _dense_member(np.asarray(assignment), self._active,
+                             self.sc.n_servers)
 
     def _sweep(self, assignment: np.ndarray, profile: str, max_moves: int,
                exchange_samples: int, key, rel_tol: float | None = None,
@@ -788,6 +921,7 @@ class FastAssociationEngine:
         else:
             self.last_state.update(toggle_cost=np.asarray(toggles[0]))
         moves = int(moves)
+        self.last_moves = moves
         trace = [float(x) for x in np.asarray(trace[:moves + 1], np.float64)]
         assign_np = np.asarray(assign, np.int64)
         # stable-point cache for rerun_incremental: everything a warm start
@@ -814,15 +948,7 @@ class FastAssociationEngine:
         # true (15)-(17) costs are over the active population only: inactive
         # devices hold no resources (f = beta = 0 in the masked sums above)
         # and must not enter the per-device energy/delay terms
-        act = np.flatnonzero(self._active)
-        dev = self.sc.dev
-        if act.size < self.sc.n_devices:
-            dev = jax.tree.map(lambda x: x[act], dev)
-        e, t, c = global_cost(dev, self.sc.srv,
-                              jnp.asarray(np.asarray(assignment)[act]),
-                              jnp.asarray(np.asarray(f)[act]),
-                              jnp.asarray(np.maximum(np.asarray(beta)[act],
-                                                     1e-9)), self.sc.lp)
+        e, t, c = _true_cost_terms(self.sc, self._active, assignment, f, beta)
         return AssociationResult(
             assignment=assignment.copy(), f=f, beta=beta,
             server_cost=server_cost, total_cost=total,

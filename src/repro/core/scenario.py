@@ -306,13 +306,8 @@ def perturb_scenario(sc: Scenario, *, seed: int, drift_m: float = 50.0,
     bad = active_new & ~avail.any(axis=0)
     avail[nearest[bad], bad] = True
 
-    avail_flips = avail != avail_old
-    eff_flips = ((avail & active_new[None, :])
-                 != (avail_old & active_old[None, :]))
-    stale = eff_flips.any(axis=1)
-    if moved.any():
-        stale |= avail_old[:, moved].any(axis=1)
-        stale |= avail[:, moved].any(axis=1)
+    avail_flips, eff_flips, stale = _delta_flips(
+        avail_old, active_old, avail, active_new, moved)
 
     sc_new = dataclasses.replace(sc, avail=avail, dist=dist,
                                  active=active_new, dev_xy=dev_xy)
@@ -320,6 +315,140 @@ def perturb_scenario(sc: Scenario, *, seed: int, drift_m: float = 50.0,
                           departed=departed, avail_flips=avail_flips,
                           eff_flips=eff_flips, stale_servers=stale)
     return sc_new, delta
+
+
+def _same_params(a, b) -> bool:
+    """True when two parameter dataclasses hold equal arrays (identity
+    short-circuits the common case: ``perturb_scenario`` carries the very
+    same dev/srv objects across ticks)."""
+    if a is b:
+        return True
+    return all(np.array_equal(np.asarray(getattr(a, f.name)),
+                              np.asarray(getattr(b, f.name)))
+               for f in dataclasses.fields(a))
+
+
+def _delta_flips(avail_old: np.ndarray, active_old: np.ndarray,
+                 avail_new: np.ndarray, active_new: np.ndarray,
+                 moved: np.ndarray
+                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The ONE derivation of a delta's ``(avail_flips, eff_flips,
+    stale_servers)`` — shared by :func:`perturb_scenario` (single tick) and
+    :func:`diff_scenarios` (multi-tick diff), so the conservative staleness
+    rule incremental consumers rely on cannot diverge between the two:
+    every server whose effective reachable set changed, plus every server
+    reaching a moved device in the old or new scenario (distance-derived
+    quantities may differ even when reach did not)."""
+    avail_flips = avail_new != avail_old
+    eff_flips = ((avail_new & active_new[None, :])
+                 != (avail_old & active_old[None, :]))
+    stale = eff_flips.any(axis=1)
+    if moved.any():
+        stale |= avail_old[:, moved].any(axis=1)
+        stale |= avail_new[:, moved].any(axis=1)
+    return avail_flips, eff_flips, stale
+
+
+def diff_scenarios(sc_old: Scenario, sc_new: Scenario) -> ScenarioDelta:
+    """Recover a :class:`ScenarioDelta` by diffing two same-shaped scenarios.
+
+    This is the multi-tick composition the live training loop needs when the
+    association engine re-solves less often than the scenario churns:
+    ``perturb_scenario`` deltas describe single ticks, and replaying them one
+    at a time would force one incremental re-solve per tick. Diffing the
+    scenario at the last re-solve against the current one yields the single
+    combined delta ``FastAssociationEngine.rerun_incremental`` expects —
+    with the same conservative ``stale_servers`` semantics (servers whose
+    effective reach changed, plus servers reaching a moved device in either
+    scenario). A device that departed and returned between the endpoints
+    cancels out, exactly as it should for cache invalidation purposes
+    (``seed`` is -1: a diff has no generating seed).
+    """
+    if (sc_old.n_devices != sc_new.n_devices
+            or sc_old.n_servers != sc_new.n_servers):
+        raise ValueError("diff_scenarios requires same-shaped scenarios")
+    if not (_same_params(sc_old.dev, sc_new.dev)
+            and _same_params(sc_old.srv, sc_new.srv)
+            and sc_old.lp == sc_new.lp):
+        # caches keyed on RA constants survive a delta ONLY because device/
+        # server/learning params are churn-invariant; diffing two unrelated
+        # scenarios would silently poison every incremental consumer
+        raise ValueError(
+            "diff_scenarios requires churn-invariant device/server/learning "
+            "parameters (only avail/dist/active/dev_xy may differ)")
+    active_old = sc_old.active_mask
+    active_new = sc_new.active_mask
+    avail_old = np.asarray(sc_old.avail, dtype=bool)
+    avail_new = np.asarray(sc_new.avail, dtype=bool)
+    moved = (np.asarray(sc_old.dist) != np.asarray(sc_new.dist)).any(axis=0)
+    arrived = active_new & ~active_old
+    departed = active_old & ~active_new
+    avail_flips, eff_flips, stale = _delta_flips(
+        avail_old, active_old, avail_new, active_new, moved)
+    return ScenarioDelta(seed=-1, moved=moved, arrived=arrived,
+                         departed=departed, avail_flips=avail_flips,
+                         eff_flips=eff_flips, stale_servers=stale)
+
+
+@dataclass(frozen=True)
+class DeviceClientBridge:
+    """Index bridge between a Scenario's device axis and a federated
+    dataset's client axis — the seam the live co-simulation crosses every
+    round (``Scenario.active`` -> trainer ``client_mask``, device->server
+    assignment -> per-client assignment).
+
+    ``device_of[c]`` is the device backing client ``c``; ``client_of[n]`` is
+    the client backed by device ``n`` (or -1 for a device with no client —
+    legal when the scenario models more devices than the dataset has
+    clients). The default bridge is the identity prefix."""
+
+    device_of: np.ndarray   # (n_clients,) int32
+    client_of: np.ndarray   # (n_devices,) int32, -1 = no client
+
+    @property
+    def n_clients(self) -> int:
+        return int(self.device_of.shape[0])
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.client_of.shape[0])
+
+    def client_mask(self, devices: np.ndarray) -> np.ndarray:
+        """Map any device-axis boolean mask (``Scenario.active``, an arrival
+        set, ...) onto the client axis; devices backing no client drop out."""
+        return np.asarray(devices, dtype=bool)[self.device_of]
+
+    def client_assignment(self, assignment: np.ndarray) -> np.ndarray:
+        """Map a device->server assignment onto the client axis."""
+        return np.asarray(assignment)[self.device_of]
+
+
+def device_client_bridge(sc: Scenario, n_clients: int,
+                         device_of: np.ndarray | None = None
+                         ) -> DeviceClientBridge:
+    """Build (and validate) the device<->client bridge for ``sc``.
+
+    ``device_of`` defaults to the identity prefix ``arange(n_clients)`` —
+    client ``c`` is device ``c`` — which requires ``n_clients <= N``. An
+    explicit ``device_of`` may map clients to any distinct devices.
+    """
+    n = sc.n_devices
+    if device_of is None:
+        if n_clients > n:
+            raise ValueError(
+                f"dataset has {n_clients} clients but the scenario only "
+                f"{n} devices; pass an explicit device_of mapping")
+        device_of = np.arange(n_clients, dtype=np.int32)
+    device_of = np.asarray(device_of, dtype=np.int32)
+    if device_of.shape != (n_clients,):
+        raise ValueError(f"device_of must have shape ({n_clients},)")
+    if device_of.size and (device_of.min() < 0 or device_of.max() >= n):
+        raise ValueError("device_of entries must be valid device indices")
+    if np.unique(device_of).size != device_of.size:
+        raise ValueError("device_of must map clients to distinct devices")
+    client_of = np.full(n, -1, dtype=np.int32)
+    client_of[device_of] = np.arange(n_clients, dtype=np.int32)
+    return DeviceClientBridge(device_of=device_of, client_of=client_of)
 
 
 def _changed_rows(eff: np.ndarray, row_sets: list[np.ndarray]) -> np.ndarray:

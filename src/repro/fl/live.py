@@ -1,0 +1,353 @@
+"""Live HFEL co-simulation: elastic edge re-association DURING federated
+training.
+
+The paper treats edge association and training as one system — the
+association policy exists to cut the cost of the training rounds it
+schedules — and this module finally runs them as one program: a
+:class:`LiveHFELRunner` drives :class:`repro.fl.training.FederatedTrainer`
+rounds while the :class:`repro.core.scenario.Scenario` churns underneath it.
+Every global round
+
+1. applies one seeded :func:`repro.core.scenario.perturb_scenario` tick
+   (mobility drift, reach flips, arrivals/departures),
+2. re-solves the edge association via a pluggable policy (below),
+3. repairs the trainer's state for the churn — ``Scenario.active`` maps onto
+   the trainer's ``client_mask`` through a
+   :class:`repro.core.scenario.DeviceClientBridge`, departed devices are
+   parked (masked out of aggregation but kept in the fixed-size arrays), and
+   arrivals are re-admitted with their edge's CURRENT parameters
+   (:meth:`FederatedTrainer.readmit_clients`),
+4. hot-swaps the assignment between cloud aggregations (the swap point where
+   the global weighted mean is invariant to the grouping — the property-test
+   contract in ``tests/test_fl_training.py``), and
+5. accumulates the paper's global system cost (eq. 17) for the round's
+   assignment on the round's scenario, next to training accuracy.
+
+Re-association policies
+-----------------------
+``static``
+    The round-0 stable assignment is frozen; churn only ever triggers the
+    minimal feasibility repair (:func:`repro.core.assoc_fast.repair_assignment`
+    — departures park, unreachable devices fall to their nearest reachable
+    server) with ZERO descent moves. The baseline the paper's premise says
+    should lose under mobility.
+``periodic-cold``
+    Every ``resolve_every`` rounds, a FRESH engine is built on the churned
+    scenario (full reach-map + toggle-cache rebuild) and descends from the
+    repaired previous stable point.
+``incremental-warm``
+    Every ``resolve_every`` rounds, the round-0 engine's
+    :meth:`~repro.core.assoc_fast.FastAssociationEngine.rerun_incremental`
+    re-converges from the SAME repaired stable point, but with patched
+    slot-index maps and a stale-row-only toggle-cache refresh.
+
+Every timed solve (round-0, cold, warm) runs with ``finalize=False`` — the
+non-verifying fast path returning just the assignment — so the association
+timers are symmetric across policies: cost accounting happens exactly once
+per round for every policy, on the shared reference-accuracy evaluator
+(:func:`~repro.core.assoc_fast.assignment_true_cost`), OUTSIDE the
+association timer.
+
+Because ``periodic-cold`` descends from exactly the assignment
+``incremental-warm`` repairs to (both via :func:`repair_assignment`, from
+the same last-swap stable point and active mask), the PR-4 warm/cold parity
+gate applies at EVERY swap point: the two policies must produce
+bit-identical assignments round for round, while the warm policy spends
+measurably less association wall time. ``run_live(verify=True)`` turns on
+the engine-level parity assertion inside each warm re-solve as well.
+
+Multi-tick deltas: when ``resolve_every > 1`` the scenario churns between
+re-solves; the runner hands ``rerun_incremental`` the single combined
+:func:`repro.core.scenario.diff_scenarios` delta between the last-swap
+scenario and the current one, so one incremental re-solve absorbs any
+number of ticks.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.assoc_fast import (FastAssociationEngine,
+                                   assignment_true_cost, repair_assignment)
+from repro.core.edge_association import GroupSolver
+from repro.core.scenario import (DeviceClientBridge, Scenario,
+                                 device_client_bridge, diff_scenarios,
+                                 perturb_scenario)
+from repro.data.federated import FederatedDataset
+from repro.fl.training import TrainHistory, train_federated
+
+POLICIES = ("static", "periodic-cold", "incremental-warm")
+
+# one mild mobility tick per global round: 5% of devices drift, 2% lose a
+# reach bit, 2% depart, 10% of the inactive pool returns — the operating
+# regime of the churn benchmark (assoc_scale/churn), scaled to per-round use
+DEFAULT_CHURN = {"drift_m": 60.0, "move_frac": 0.05, "flip_frac": 0.02,
+                 "depart_frac": 0.02, "arrive_frac": 0.10}
+
+
+@dataclass
+class LiveHistory:
+    """Per-round record of one live co-simulation.
+
+    The round-indexed lists always have length ``rounds`` regardless of
+    ``eval_every`` (training metrics live in ``train``, whose lists carry
+    their own ``eval_rounds`` index). ``swap_rounds``/``swap_assignments``
+    record every hot-swap, round 0's initial solve included."""
+
+    policy: str
+    resolve_every: int
+    # -- round-indexed (length == rounds) --
+    system_cost: list = field(default_factory=list)     # eq. (17)
+    system_energy: list = field(default_factory=list)   # eq. (15)
+    system_delay: list = field(default_factory=list)    # eq. (16)
+    assoc_seconds: list = field(default_factory=list)
+    swapped: list = field(default_factory=list)
+    moves: list = field(default_factory=list)
+    n_active: list = field(default_factory=list)
+    n_arrived: list = field(default_factory=list)
+    n_departed: list = field(default_factory=list)
+    # -- swap-indexed --
+    swap_rounds: list = field(default_factory=list)
+    swap_assignments: list = field(default_factory=list)
+    train: TrainHistory | None = None
+
+    @property
+    def rounds(self) -> int:
+        return len(self.system_cost)
+
+    @property
+    def cumulative_cost(self) -> float:
+        """Sum of the per-round eq.-(17) costs — the figure of merit the
+        re-association policies compete on."""
+        return float(np.sum(self.system_cost))
+
+    @property
+    def assoc_seconds_total(self) -> float:
+        return float(np.sum(self.assoc_seconds))
+
+    def as_dict(self) -> dict:
+        """JSON-friendly summary (per-swap assignments are kept only as
+        counts; the arrays themselves stay on the object)."""
+        return {
+            "policy": self.policy, "resolve_every": self.resolve_every,
+            "rounds": self.rounds,
+            "system_cost": [float(c) for c in self.system_cost],
+            "system_energy": [float(c) for c in self.system_energy],
+            "system_delay": [float(c) for c in self.system_delay],
+            "cumulative_cost": self.cumulative_cost,
+            "assoc_seconds": [float(s) for s in self.assoc_seconds],
+            "assoc_seconds_total": self.assoc_seconds_total,
+            "swapped": [bool(s) for s in self.swapped],
+            "moves": [int(m) for m in self.moves],
+            "n_active": [int(a) for a in self.n_active],
+            "n_arrived": [int(a) for a in self.n_arrived],
+            "n_departed": [int(d) for d in self.n_departed],
+            "swap_rounds": [int(r) for r in self.swap_rounds],
+            "train": self.train.as_dict() if self.train is not None else None,
+        }
+
+
+class LiveHFELRunner:
+    """The round policy object behind :func:`run_live` — usable directly as
+    ``train_federated(..., round_hook=runner)``.
+
+    ``begin_round(trainer, r)`` performs the full churn/re-associate/repair
+    step described in the module docstring and returns the round's
+    (n_clients,) assignment. State between rounds: the current scenario,
+    the device-axis assignment, and (for ``incremental-warm``) the live
+    association engine with its toggle-cache warm state.
+    """
+
+    def __init__(self, sc: Scenario, n_clients: int, *,
+                 policy: str = "incremental-warm", resolve_every: int = 1,
+                 churn: dict | None = None, seed: int = 0,
+                 kind: str = "fast", profile: str = "coarse",
+                 rel_tol: float = 1e-3, compact: bool | str = "auto",
+                 max_moves: int = 10_000, exchange_samples: int = 0,
+                 verify: bool = False,
+                 bridge: DeviceClientBridge | None = None):
+        if policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
+        if resolve_every < 1:
+            raise ValueError("resolve_every must be >= 1")
+        self.sc = sc
+        self.policy = policy
+        self.resolve_every = resolve_every
+        self.churn = dict(DEFAULT_CHURN if churn is None else churn)
+        self.seed = seed
+        self.kind = kind
+        self.profile = profile
+        self.rel_tol = rel_tol
+        self.compact = compact
+        self.max_moves = max_moves
+        self.exchange_samples = exchange_samples
+        self.verify = verify
+        self.bridge = bridge or device_client_bridge(sc, n_clients)
+        if self.bridge.n_devices != sc.n_devices:
+            raise ValueError("bridge does not match the scenario's device axis")
+        if self.bridge.n_clients != n_clients:
+            raise ValueError(
+                f"bridge maps {self.bridge.n_clients} clients but the "
+                f"dataset has {n_clients}")
+        # reference-accuracy cost evaluator, shared by every policy and kept
+        # OUT of the association timer; valid across churn because device/
+        # server physical params are perturbation-invariant ("proportional"
+        # reads distances, so it rebuilds per round)
+        self._eval_solver = (None if kind == "proportional" else
+                             GroupSolver(sc, kind, seed=seed,
+                                         profile="default"))
+        self.engine: FastAssociationEngine | None = None
+        self.assignment: np.ndarray | None = None   # device axis, parked incl.
+        self._active_prev = sc.active_mask.copy()   # matches self.assignment
+        self._sc_at_swap = sc
+        self._active_at_swap = sc.active_mask.copy()
+        self._assign_at_swap: np.ndarray | None = None
+        self.history = LiveHistory(policy=policy, resolve_every=resolve_every)
+
+    # -- internals -----------------------------------------------------------
+
+    def _tick_seed(self, r: int) -> int:
+        # deterministic per (seed, round); identical across policies so every
+        # policy sees the exact same churn trajectory
+        return (self.seed + 1) * 1_000_003 + r
+
+    def _new_engine(self, sc: Scenario) -> FastAssociationEngine:
+        return FastAssociationEngine(sc, kind=self.kind, seed=self.seed,
+                                     rel_tol=self.rel_tol,
+                                     profile=self.profile,
+                                     compact=self.compact)
+
+    def _record(self, *, assoc_s: float, swapped: bool, moves: int,
+                arrived: int, departed: int) -> None:
+        h = self.history
+        # _eval_solver is None for "proportional" (distance-dependent):
+        # assignment_true_cost then builds a fresh per-round solver itself
+        e, t, c = assignment_true_cost(self.sc, self.assignment,
+                                       solver=self._eval_solver,
+                                       kind=self.kind, seed=self.seed)
+        h.system_cost.append(c)
+        h.system_energy.append(e)
+        h.system_delay.append(t)
+        h.assoc_seconds.append(assoc_s)
+        h.swapped.append(swapped)
+        h.moves.append(moves)
+        h.n_active.append(int(self.sc.active_mask.sum()))
+        h.n_arrived.append(arrived)
+        h.n_departed.append(departed)
+        if swapped:
+            h.swap_rounds.append(len(h.system_cost) - 1)
+            h.swap_assignments.append(self.assignment.copy())
+
+    # -- the round policy ----------------------------------------------------
+
+    def begin_round(self, trainer, r: int):
+        if r == 0:
+            trainer.client_mask = jnp.asarray(
+                self.bridge.client_mask(self.sc.active_mask))
+            t0 = time.perf_counter()
+            self.engine = self._new_engine(self.sc)
+            assignment = self.engine.run(
+                "nearest", max_moves=self.max_moves,
+                exchange_samples=self.exchange_samples, finalize=False)
+            assoc_s = time.perf_counter() - t0
+            self.assignment = np.asarray(assignment)
+            self._assign_at_swap = self.assignment.copy()
+            self._record(assoc_s=assoc_s, swapped=True,
+                         moves=self.engine.last_moves, arrived=0, departed=0)
+            if self.policy != "incremental-warm":
+                # only the warm policy re-enters the engine (toggle caches,
+                # reach maps, device buffers) after round 0 — don't keep
+                # that state resident for the whole run under the others
+                self.engine = None
+            return self.bridge.client_assignment(self.assignment)
+
+        self.sc, delta = perturb_scenario(self.sc, seed=self._tick_seed(r),
+                                          **self.churn)
+        active = self.sc.active_mask
+        assoc_s, moves, swapped = 0.0, 0, False
+        resolve = self.policy != "static" and r % self.resolve_every == 0
+        if resolve and self.policy == "incremental-warm":
+            # the delta derivation is part of the warm path's per-swap work,
+            # so it belongs inside the association timer (cold's timer
+            # likewise spans its repair + engine build)
+            t0 = time.perf_counter()
+            combined = diff_scenarios(self._sc_at_swap, self.sc)
+            self.assignment = self.engine.rerun_incremental(
+                self.sc, combined, max_moves=self.max_moves,
+                exchange_samples=self.exchange_samples, verify=self.verify,
+                finalize=False)
+            assoc_s = time.perf_counter() - t0
+            moves, swapped = self.engine.last_moves, True
+        elif resolve:   # periodic-cold
+            t0 = time.perf_counter()
+            assign0, *_ = repair_assignment(self.sc, self._assign_at_swap,
+                                            self._active_at_swap)
+            cold = self._new_engine(self.sc)
+            assignment = cold.run(assignment=assign0,
+                                  max_moves=self.max_moves,
+                                  exchange_samples=self.exchange_samples,
+                                  finalize=False)
+            assoc_s = time.perf_counter() - t0
+            self.assignment = np.asarray(assignment)
+            moves, swapped = cold.last_moves, True
+        else:
+            # static policy, and the off-cycle rounds of the re-association
+            # policies: minimal feasibility repair, zero descent moves
+            self.assignment, *_ = repair_assignment(self.sc, self.assignment,
+                                                    self._active_prev)
+        if swapped:
+            self._sc_at_swap = self.sc
+            self._active_at_swap = active.copy()
+            self._assign_at_swap = self.assignment.copy()
+        self._active_prev = active.copy()
+
+        trainer.client_mask = jnp.asarray(self.bridge.client_mask(active))
+        arrivals_c = self.bridge.client_mask(delta.arrived)
+        if arrivals_c.any():
+            trainer.readmit_clients(
+                jnp.asarray(arrivals_c),
+                jnp.asarray(self.bridge.client_assignment(self.assignment)),
+                self.sc.n_servers)
+        self._record(assoc_s=assoc_s, swapped=swapped, moves=moves,
+                     arrived=int(delta.arrived.sum()),
+                     departed=int(delta.departed.sum()))
+        return self.bridge.client_assignment(self.assignment)
+
+
+def run_live(sc: Scenario, ds: FederatedDataset, *,
+             policy: str = "incremental-warm", rounds: int = 10,
+             resolve_every: int = 1, churn: dict | None = None, seed: int = 0,
+             local_iters: int = 5, edge_iters: int = 2, lr: float = 0.05,
+             model: str = "mlr", eval_every: int = 1, train_seed: int = 0,
+             kind: str = "fast", profile: str = "coarse",
+             rel_tol: float = 1e-3, compact: bool | str = "auto",
+             max_moves: int = 10_000, exchange_samples: int = 0,
+             verify: bool = False,
+             bridge: DeviceClientBridge | None = None) -> LiveHistory:
+    """Run one live HFEL co-simulation end-to-end; returns its
+    :class:`LiveHistory` (training metrics under ``.train``).
+
+    The association side (``policy``/``resolve_every``/engine knobs) and the
+    training side (``local_iters``/``edge_iters``/``lr``/``model``) share
+    the scenario through a :func:`device_client_bridge`; churn ticks are
+    seeded from ``seed`` and round index only, so different policies at the
+    same ``seed`` face the exact same scenario trajectory — the controlled
+    comparison the live benchmark and the parity tests rely on.
+    """
+    runner = LiveHFELRunner(sc, ds.n_clients, policy=policy,
+                            resolve_every=resolve_every, churn=churn,
+                            seed=seed, kind=kind, profile=profile,
+                            rel_tol=rel_tol, compact=compact,
+                            max_moves=max_moves,
+                            exchange_samples=exchange_samples, verify=verify,
+                            bridge=bridge)
+    hist = train_federated(ds, method="hfel", n_servers=sc.n_servers,
+                           local_iters=local_iters, edge_iters=edge_iters,
+                           rounds=rounds, lr=lr, model=model, seed=train_seed,
+                           eval_every=eval_every, round_hook=runner)
+    runner.history.train = hist
+    return runner.history

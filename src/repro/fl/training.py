@@ -25,15 +25,33 @@ from repro.data.federated import FederatedDataset
 from repro.fl.fl_model import MODELS, accuracy, masked_loss
 
 
+def _group_means(leaf, w, assignment, n_servers):
+    """eq. (8) weighted group means of a client-stacked leaf — the ONE place
+    the group-mean arithmetic (and its zero-weight floor) lives. Returns
+    ``(per-client broadcast of its group's mean, per-client group liveness)``;
+    the mean is garbage wherever liveness is False (weight-0 group), so
+    callers must gate on it."""
+    shape1 = (-1,) + (1,) * (leaf.ndim - 1)
+    wr = w.reshape(shape1)
+    num = jax.ops.segment_sum(leaf * wr, assignment, n_servers)
+    den = jax.ops.segment_sum(w, assignment, n_servers)
+    server = num / jnp.maximum(den.reshape(shape1), 1e-9)
+    return server[assignment], (den > 0)[assignment].reshape(shape1)
+
+
 @dataclass
 class TrainHistory:
     test_acc: list = field(default_factory=list)
     train_acc: list = field(default_factory=list)
     train_loss: list = field(default_factory=list)
+    # global-round index of each entry above (evaluation may be subsampled
+    # via ``eval_every``; all four lists always share one length)
+    eval_rounds: list = field(default_factory=list)
 
     def as_dict(self):
         return {"test_acc": self.test_acc, "train_acc": self.train_acc,
-                "train_loss": self.train_loss}
+                "train_loss": self.train_loss,
+                "eval_rounds": self.eval_rounds}
 
 
 class FederatedTrainer:
@@ -79,28 +97,65 @@ class FederatedTrainer:
         return self.sizes * self.client_mask.astype(self.sizes.dtype)
 
     def edge_aggregate(self, assignment: jnp.ndarray, n_servers: int):
-        """eq. (8): weighted mean within each server group, broadcast back."""
+        """eq. (8): weighted mean within each server group, broadcast back.
+
+        A group whose participating weight is zero (every member masked out
+        — e.g. a fully-departed edge server under churn) has no defined
+        mean: its clients KEEP their current parameters instead of receiving
+        the degenerate ``0 / max(den, eps)`` quotient, which would silently
+        zero a parked client's state and poison its later re-admission.
+        Masked clients of a live group still receive the group broadcast
+        (re-sync on return), matching the cloud semantics below.
+        """
         w = self._weights()
+        assignment = jnp.asarray(assignment)
 
         def agg(leaf):
-            num = jax.ops.segment_sum(
-                leaf * w.reshape((-1,) + (1,) * (leaf.ndim - 1)),
-                assignment, n_servers)
-            den = jax.ops.segment_sum(w, assignment, n_servers)
-            server = num / jnp.maximum(
-                den.reshape((-1,) + (1,) * (leaf.ndim - 1)), 1e-9)
-            return server[assignment]
+            mean, live = _group_means(leaf, w, assignment, n_servers)
+            return jnp.where(live, mean, leaf)
 
         self.client_params = jax.tree.map(agg, self.client_params)
 
     def cloud_aggregate(self):
-        """eq. (14): global weighted mean, broadcast back."""
+        """eq. (14): global weighted mean, broadcast back (to masked clients
+        too — stragglers re-sync from the global model). With NO
+        participating client at all there is no mean; everyone keeps their
+        parameters rather than collapsing to the zero quotient."""
         w = self._weights()
 
         def agg(leaf):
             wr = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
             mean = jnp.sum(leaf * wr, axis=0) / jnp.maximum(jnp.sum(w), 1e-9)
-            return jnp.broadcast_to(mean, leaf.shape)
+            return jnp.where(jnp.sum(w) > 0,
+                             jnp.broadcast_to(mean, leaf.shape), leaf)
+
+        self.client_params = jax.tree.map(agg, self.client_params)
+
+    def readmit_clients(self, arrivals: jnp.ndarray, assignment: jnp.ndarray,
+                        n_servers: int):
+        """Re-admit arriving clients with their edge's CURRENT parameters:
+        each arrival's state is set to the eq.-(8) weighted mean of its
+        assigned server's participating members (the arrivals themselves
+        excluded as donors), falling back to the global weighted mean when
+        that group is otherwise empty — and keeping the arrival's old
+        parameters when nobody at all can donate. This is the trainer-side
+        half of an elastic hot-swap: a device that returns mid-training
+        joins its edge where the edge *is*, not where the device left off.
+        """
+        arrivals = jnp.asarray(arrivals, bool)
+        assignment = jnp.asarray(assignment)
+        donors = self.client_mask & ~arrivals
+        w = self.sizes * donors.astype(self.sizes.dtype)
+
+        def agg(leaf):
+            shape1 = (-1,) + (1,) * (leaf.ndim - 1)
+            mean, grp_live = _group_means(leaf, w, assignment, n_servers)
+            gmean = jnp.broadcast_to(
+                jnp.sum(leaf * w.reshape(shape1), axis=0)
+                / jnp.maximum(jnp.sum(w), 1e-9), leaf.shape)
+            src = jnp.where(grp_live, mean, gmean)
+            take = arrivals.reshape(shape1) & (jnp.sum(w) > 0)
+            return jnp.where(take, src, leaf)
 
         self.client_params = jax.tree.map(agg, self.client_params)
 
@@ -145,16 +200,31 @@ def train_federated(ds: FederatedDataset, *, method: str = "hfel",
                     round_hook: Callable | None = None) -> TrainHistory:
     """Run ``rounds`` global iterations of HFEL or FedAvg; returns history.
 
-    ``round_hook(trainer, round_idx)`` runs before each round (failure
-    injection / straggler masking / elastic re-association).
+    ``round_hook`` runs before each round and is either
+
+    * a plain callable ``hook(trainer, round_idx)`` (failure injection /
+      straggler masking — the historical surface), or
+    * a *round policy* object exposing
+      ``begin_round(trainer, round_idx) -> assignment | None``: returning an
+      (n_clients,) array hot-swaps the HFEL edge assignment for this round
+      and every following one until the next swap. Swaps land between cloud
+      aggregations (before the round's first local step), where the global
+      weighted mean is invariant to the grouping — see
+      :class:`repro.fl.live.LiveHFELRunner` for the live co-simulation
+      policy built on this.
     """
     trainer = FederatedTrainer(ds, model=model, lr=lr, seed=seed)
     if assignment is None:
         assignment = np.arange(ds.n_clients) % n_servers
     assignment = jnp.asarray(assignment)
     hist = TrainHistory()
+    begin_round = getattr(round_hook, "begin_round", None)
     for r in range(rounds):
-        if round_hook is not None:
+        if begin_round is not None:
+            swapped = begin_round(trainer, r)
+            if swapped is not None:
+                assignment = jnp.asarray(swapped)
+        elif round_hook is not None:
             round_hook(trainer, r)
         if method == "hfel":
             trainer.hfel_round(assignment, n_servers, local_iters, edge_iters)
@@ -167,4 +237,5 @@ def train_federated(ds: FederatedDataset, *, method: str = "hfel",
             hist.test_acc.append(m["test_acc"])
             hist.train_acc.append(m["train_acc"])
             hist.train_loss.append(m["train_loss"])
+            hist.eval_rounds.append(r)
     return hist

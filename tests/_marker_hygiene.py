@@ -1,0 +1,47 @@
+"""Marker hygiene: any test that runs longer than the configured limit must
+carry ``@pytest.mark.slow``, so ``scripts/tier1.sh --fast`` keeps meaning
+"fast" as the suite grows.
+
+Enforcement is opt-in via the ``TIER1_SLOW_MARKER_LIMIT_S`` environment
+variable (seconds; unset/0 disables), which ``scripts/tier1.sh`` exports —
+plain local ``pytest`` runs are never failed by a loaded machine. The hook
+lives in its own importable module (conftest re-exports it) so the
+enforcement path itself is testable in a pytest subprocess.
+"""
+
+import os
+
+import pytest
+
+ENV_VAR = "TIER1_SLOW_MARKER_LIMIT_S"
+
+
+def slow_marker_limit_s() -> float:
+    try:
+        return float(os.environ.get(ENV_VAR, "") or 0.0)
+    except ValueError:
+        return 0.0
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_makereport(item, call):
+    outcome = yield
+    report = outcome.get_result()
+    limit = slow_marker_limit_s()
+    if limit <= 0 or item.get_closest_marker("slow") is not None:
+        return
+    # setup time counts too: an expensive (module-scoped) fixture bills its
+    # build to the first test that triggers it, which is exactly where the
+    # wall-clock creep lives
+    if report.when == "setup" and report.passed:
+        item._hygiene_setup_s = report.duration
+        return
+    if report.when == "call" and report.passed:
+        total = report.duration + getattr(item, "_hygiene_setup_s", 0.0)
+        if total > limit:
+            report.outcome = "failed"
+            report.longrepr = (
+                f"marker hygiene: {item.nodeid} took {total:.1f}s "
+                f"setup+call (> {ENV_VAR}={limit:g}s) without "
+                "@pytest.mark.slow — mark it slow (scripts/tier1.sh --fast "
+                "deselects it) or make it fast")

@@ -1,4 +1,5 @@
 import os
+import sys
 
 # Smoke tests and benches run single-device (the 512-device override lives
 # ONLY in repro.launch.dryrun, which runs as its own process).
@@ -6,6 +7,11 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
 import pytest  # noqa: E402
+
+sys.path.insert(0, os.path.dirname(__file__))
+# marker hygiene: over-limit unmarked tests FAIL when scripts/tier1.sh
+# exports TIER1_SLOW_MARKER_LIMIT_S (see tests/_marker_hygiene.py)
+from _marker_hygiene import pytest_runtest_makereport  # noqa: E402,F401
 
 jax.config.update("jax_enable_x64", False)
 

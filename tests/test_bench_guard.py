@@ -109,6 +109,34 @@ def test_expected_new_substrings_labelled(monkeypatch, tmp_path, capsys):
     assert "new timings (no baseline): assoc_scale/misc_new" in out
 
 
+def test_live_hfel_section_keys_expected_new(monkeypatch, tmp_path, capsys):
+    """The live co-simulation section's timing keys (all carrying "live")
+    read as intentional one-sided tolerance on their first run, and a
+    shared live key still regresses like any other timing."""
+    rc = _run(monkeypatch, tmp_path,
+              {"live_hfel": {"timings": {"live_assoc_warm_n250_k10": 4.0,
+                                         "live_assoc_cold_n250_k10": 9.0}},
+               "assoc_scale": {"timings": {"shared": 1.0,
+                                           "liveness_probe": 2.0}}},
+              {"assoc_scale": {"timings": {"shared": 1.0}}})
+    out = capsys.readouterr().out
+    assert rc == 0
+    expected_line = [l for l in out.splitlines()
+                     if l.startswith("expected new timings")]
+    assert len(expected_line) == 1
+    assert "live_hfel/live_assoc_warm_n250_k10" in expected_line[0]
+    assert "live_hfel/live_assoc_cold_n250_k10" in expected_line[0]
+    # "live" alone must NOT exempt keys outside the live_hfel section
+    assert "liveness_probe" not in expected_line[0]
+    assert "new timings (no baseline): assoc_scale/liveness_probe" in out
+    # once baselined, a live timing regression fails the guard
+    rc = _run(monkeypatch, tmp_path,
+              {"live_hfel": {"timings": {"live_assoc_warm_n250_k10": 9.0}}},
+              {"live_hfel": {"timings": {"live_assoc_warm_n250_k10": 4.0}}})
+    assert rc == 1
+    assert "REGRESSION" in capsys.readouterr().out
+
+
 def test_missing_current_fails(monkeypatch, tmp_path, capsys):
     rc = _run(monkeypatch, tmp_path, None, {"s": {"timings": {"k": 1.0}}})
     assert rc == 1

@@ -1,8 +1,12 @@
-"""FL runtime: Algorithm 1 semantics, HFEL vs FedAvg, masking."""
+"""FL runtime: Algorithm 1 semantics, HFEL vs FedAvg, masking — plus the
+aggregation invariants the live hot-swap (repro.fl.live) relies on, as
+property tests over the hypothesis shim."""
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.data import make_mnist_like
 from repro.fl import FederatedTrainer, train_federated
@@ -53,7 +57,6 @@ def test_aggregation_weights_match_eq8():
 
 
 def test_client_mask_excludes_stragglers_from_aggregation():
-    import jax
     ds = make_mnist_like(4, samples_total=400, seed=3)
     tr = FederatedTrainer(ds, lr=0.05)
     tr.client_params = jax.tree.map(
@@ -61,3 +64,145 @@ def test_client_mask_excludes_stragglers_from_aggregation():
     tr.client_mask = jnp.asarray([True, True, True, False])
     tr.cloud_aggregate()
     assert float(jnp.max(jnp.abs(jax.tree.leaves(tr.client_params)[0]))) < 1e3
+
+
+# -- helpers for the hot-swap contract tests ---------------------------------
+
+_DS6 = make_mnist_like(6, samples_total=500, seed=4)
+
+
+def _trainer(param_seed: int) -> FederatedTrainer:
+    """A 6-client trainer whose per-client params were made distinct (one
+    local step from a seeded shift), so aggregation actually mixes state."""
+    tr = FederatedTrainer(_DS6, lr=0.05)
+    rng = np.random.default_rng(param_seed)
+    shift = jnp.asarray(rng.normal(0.0, 1.0, (6,)).astype(np.float32))
+    tr.client_params = jax.tree.map(
+        lambda p: p + shift.reshape((6,) + (1,) * (p.ndim - 1)), tr.client_params)
+    return tr
+
+
+def _global(tr):
+    return jax.tree.leaves(tr.global_params())
+
+
+def _weighted_mean(tr):
+    w = np.asarray(tr._weights(), np.float64)
+    leaf = np.asarray(jax.tree.leaves(tr.client_params)[0], np.float64)
+    return (leaf * w.reshape((-1,) + (1,) * (leaf.ndim - 1))).sum(0) / w.sum()
+
+
+# -- regression: the empty-group / all-masked bugs the live loop tripped -----
+
+def test_edge_aggregate_empty_server_keeps_client_params():
+    """A fully-departed server has no mean: its (masked) clients must keep
+    their parameters, not receive the degenerate zero quotient that used to
+    poison re-admission."""
+    tr = _trainer(0)
+    before = jax.tree.leaves(tr.client_params)[0].copy()
+    tr.client_mask = jnp.asarray([True, True, True, True, False, False])
+    assignment = jnp.asarray([0, 0, 0, 0, 1, 1])   # server 1 fully masked
+    tr.edge_aggregate(assignment, 2)
+    after = jax.tree.leaves(tr.client_params)[0]
+    np.testing.assert_array_equal(np.asarray(after[4:]),
+                                  np.asarray(before[4:]))
+    # the live group still aggregated (its members now share params)
+    np.testing.assert_allclose(np.asarray(after[0]), np.asarray(after[3]),
+                               rtol=1e-6)
+
+
+def test_cloud_aggregate_all_masked_keeps_params():
+    tr = _trainer(1)
+    before = jax.tree.leaves(tr.client_params)[0].copy()
+    tr.client_mask = jnp.zeros(6, bool)
+    tr.cloud_aggregate()
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(tr.client_params)[0]), np.asarray(before))
+
+
+def test_readmit_clients_takes_edge_params_with_global_fallback():
+    tr = _trainer(2)
+    tr.client_mask = jnp.asarray([True, True, True, False, True, False])
+    assignment = jnp.asarray([0, 0, 1, 1, 2, 2])
+    # arrivals: client 3 joins server 1 (donor: client 2); client 5 joins
+    # server 2 where the only other member (4) is... active, so it donates
+    arrivals = jnp.asarray([False, False, False, True, False, True])
+    tr.client_mask = tr.client_mask | arrivals
+    tr.readmit_clients(arrivals, assignment, 3)
+    leaf = jax.tree.leaves(tr.client_params)[0]
+    np.testing.assert_allclose(np.asarray(leaf[3]), np.asarray(leaf[2]),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(leaf[5]), np.asarray(leaf[4]),
+                               rtol=1e-6)
+    # empty target group -> global weighted mean over donors
+    tr2 = _trainer(3)
+    tr2.client_mask = jnp.asarray([True, True, True, True, True, False])
+    arrivals2 = jnp.asarray([False] * 5 + [True])
+    tr2.client_mask = tr2.client_mask | arrivals2
+    tr_probe = _trainer(3)
+    tr_probe.client_mask = jnp.asarray([True] * 5 + [False])
+    donors_mean = _weighted_mean(tr_probe)
+    tr2.readmit_clients(arrivals2, jnp.asarray([0, 0, 0, 1, 1, 2]), 3)
+    got = np.asarray(jax.tree.leaves(tr2.client_params)[0][5])
+    np.testing.assert_allclose(got, donors_mean, rtol=1e-5)
+
+
+# -- property tests: the trainer-side contracts the hot-swap relies on -------
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000), n_servers=st.integers(1, 4))
+def test_cloud_aggregate_invariant_to_assignment(seed, n_servers):
+    """edge_aggregate(a) . cloud_aggregate yields the SAME global model for
+    every assignment ``a`` (a weighted mean of group weighted means is the
+    global weighted mean) — the invariant that makes swapping assignments
+    between cloud aggregations safe."""
+    rng = np.random.default_rng(seed)
+    globals_ = []
+    for _ in range(2):
+        tr = _trainer(seed)
+        assignment = jnp.asarray(rng.integers(0, n_servers, 6))
+        tr.edge_aggregate(assignment, n_servers)
+        tr.cloud_aggregate()
+        globals_.append(_global(tr))
+    for a, b in zip(*globals_):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-5)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000), mask_bits=st.integers(1, 62))
+def test_edge_aggregate_conserves_weighted_mean(seed, mask_bits):
+    """The participating-weighted mean of the client fleet is unchanged by
+    edge aggregation, for any participation mask and assignment (masked
+    clients carry zero weight on both sides)."""
+    rng = np.random.default_rng(seed)
+    tr = _trainer(seed)
+    mask = np.array([(mask_bits >> i) & 1 for i in range(6)], bool)
+    if not mask.any():
+        mask[0] = True
+    tr.client_mask = jnp.asarray(mask)
+    before = _weighted_mean(tr)
+    tr.edge_aggregate(jnp.asarray(rng.integers(0, 3, 6)), 3)
+    np.testing.assert_allclose(_weighted_mean(tr), before, rtol=1e-5,
+                               atol=1e-6)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000), garbage=st.floats(1e3, 1e8))
+def test_masked_client_never_influences_global_model(seed, garbage):
+    """A departed (masked) client's parameters are inert: perturbing them
+    arbitrarily changes NOTHING about the post-aggregation global model."""
+    rng = np.random.default_rng(seed)
+    assignment = jnp.asarray(rng.integers(0, 3, 6))
+    mask = jnp.asarray([True, True, True, True, True, False])
+    outs = []
+    for junk in (garbage, -2.0 * garbage):
+        tr = _trainer(seed)
+        tr.client_mask = mask
+        tr.client_params = jax.tree.map(
+            lambda p: p.at[5].set(junk), tr.client_params)
+        tr.edge_aggregate(assignment, 3)
+        tr.cloud_aggregate()
+        outs.append(_global(tr))
+    for a, b in zip(*outs):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,86 @@
+"""The marker-hygiene enforcement (tests/_marker_hygiene.py) is itself part
+of the test-tooling contract: exercise it in a pytest subprocess on a tiny
+throwaway suite (no jax import — these run in ~a second each)."""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import _marker_hygiene
+
+_TESTS_DIR = pathlib.Path(__file__).resolve().parent
+
+_SUITE = """
+import time
+
+import pytest
+
+
+def test_sleepy_unmarked():
+    time.sleep(0.4)
+
+
+@pytest.mark.slow
+def test_sleepy_marked():
+    time.sleep(0.4)
+
+
+def test_quick():
+    pass
+
+
+@pytest.fixture
+def sleepy_fixture():
+    time.sleep(0.4)
+
+
+def test_slow_fixture_counts(sleepy_fixture):
+    pass
+"""
+
+_CONFTEST = f"""
+import sys
+
+sys.path.insert(0, {str(_TESTS_DIR)!r})
+from _marker_hygiene import pytest_runtest_makereport  # noqa: F401
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: slow test")
+"""
+
+
+def _run(tmp_path, limit):
+    (tmp_path / "test_tiny.py").write_text(_SUITE)
+    (tmp_path / "conftest.py").write_text(_CONFTEST)
+    env = dict(os.environ)
+    env[_marker_hygiene.ENV_VAR] = limit
+    return subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+         str(tmp_path)],
+        capture_output=True, text=True, env=env)
+
+
+def test_over_limit_unmarked_test_fails(tmp_path):
+    out = _run(tmp_path, "0.1")
+    assert out.returncode == 1, out.stdout + out.stderr
+    assert "marker hygiene" in out.stdout
+    assert "test_sleepy_unmarked" in out.stdout
+    # slow FIXTURE time bills to the test that triggered it
+    assert "test_slow_fixture_counts" in out.stdout
+    # the slow-marked sibling and the quick test stay green
+    assert "2 passed" in out.stdout and "2 failed" in out.stdout
+
+
+def test_disabled_limit_passes_everything(tmp_path):
+    out = _run(tmp_path, "0")
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "4 passed" in out.stdout
+
+
+def test_unparseable_limit_disables(monkeypatch):
+    monkeypatch.setenv(_marker_hygiene.ENV_VAR, "not-a-number")
+    assert _marker_hygiene.slow_marker_limit_s() == 0.0
+    monkeypatch.delenv(_marker_hygiene.ENV_VAR)
+    assert _marker_hygiene.slow_marker_limit_s() == 0.0
