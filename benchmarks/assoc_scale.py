@@ -20,6 +20,12 @@ Sections:
     refresh) vs a cold start on the perturbed scenario, with a hard
     bit-identical parity gate between the warm stable point and a cold
     rebuild from the same repaired assignment;
+  * sharded: the shard_map sweep over the forced host-device mesh — a hard
+    bit-identical parity probe vs the classic single-device path, an
+    N=20k/K=200 cold wall-clock ratio, and the N=50k/K=500 headline (cold
+    convergence to a stable point + one warm churn re-solve), the regime
+    the PR's sharded candidate refresh exists for; timing keys carry the
+    device count so bench_guard never compares across shard widths;
   * the N=2000/K=50 stress point run END-TO-END to a stable system point
     with the tiered compacted engine — the regime the dense engine cannot
     finish in benchmark time. This is a multi-minute run (~1s per coarse
@@ -316,6 +322,118 @@ def _churn(report, timings, n, k, max_moves, rel_tol=1e-3):
             "parity_ok": True}
 
 
+def _sharded_scale(report, timings, quick):
+    """Sharded-sweep scaling: the N=50k regime the single-device engine
+    cannot reach in benchmark time.
+
+    * a hard parity probe (sharded vs classic stable point, bit-identical)
+      at a small point — quick mode stops here;
+    * N=20k/K=200 smoke: cold sharded convergence plus the single-device
+      cold run for the wall-clock ratio;
+    * the N=50k/K=500 headline: cold sharded convergence END-TO-END to a
+      stable point, then one churn tick re-solved warm via
+      ``rerun_incremental`` — the elastic-reassociation operating mode
+      ``fl/live.py`` needs at this scale. Both use ``finalize=False`` (no
+      reference-accuracy re-evaluation of 500 groups) and ``spread_m=60``
+      so per-server reach stays bounded as N grows.
+
+    Every timing key carries the device count in ``device_counts`` so
+    ``scripts/bench_guard.py`` refuses to compare runs made with different
+    shard widths.
+    """
+    import jax
+
+    p = min(4, len(jax.devices()))
+    counts: dict[str, int] = {}
+    out: dict = {"n_devices": p, "device_counts": counts}
+    report("assoc_scale/sharded/devices", None, p)
+    if p < 2:
+        report("assoc_scale/sharded/SKIPPED", None,
+               "single device — set XLA_FLAGS=--xla_force_host_platform"
+               "_device_count=4")
+        return out
+
+    # hard parity probe: sharded stable point bit-identical to classic
+    sc = make_large_scenario(250, 10, seed=0)
+    ref = FastAssociationEngine(sc, kind="fast", seed=0, profile="coarse",
+                                compact="bucketed").run(
+        "nearest", max_moves=6, exchange_samples=0)
+    eng = FastAssociationEngine(sc, kind="fast", seed=0, profile="coarse",
+                                compact="bucketed", shards=p)
+    t0 = time.time()
+    res = eng.run("nearest", max_moves=6, exchange_samples=0)
+    dt = time.time() - t0
+    assert np.array_equal(ref.assignment, res.assignment), (
+        "sharded stable point diverged from the classic sweep")
+    timings["sharded_parity_n250_k10"] = dt
+    counts["sharded_parity_n250_k10"] = p
+    report("assoc_scale/sharded/N250_K10_parity", None, True)
+    if quick:
+        return out
+
+    def _cold(n, k, shards, tag, max_moves):
+        eng = FastAssociationEngine(
+            make_large_scenario(n, k, seed=0, spread_m=60.0), kind="fast",
+            seed=0, profile="coarse", rel_tol=1e-2, compact="bucketed",
+            shards=shards)
+        t0 = time.time()
+        eng.run("nearest", max_moves=max_moves, exchange_samples=0,
+                finalize=False)
+        dt = time.time() - t0
+        stable = eng.last_moves < max_moves
+        timings[tag] = dt
+        counts[tag] = shards or 1
+        report(f"assoc_scale/sharded/{tag}_s", None, round(dt, 3))
+        report(f"assoc_scale/sharded/{tag}_moves", None, eng.last_moves)
+        report(f"assoc_scale/sharded/{tag}_stable", None, stable)
+        return eng, dt, stable
+
+    # N=20k smoke: sharded vs single-device cold wall clock
+    _, t_1dev, _ = _cold(20_000, 200, None, "sharded_cold_1dev_n20000_k200", 4000)
+    _, t_pdev, _ = _cold(20_000, 200, p, f"sharded_cold_{p}dev_n20000_k200", 4000)
+    speedup = t_1dev / max(t_pdev, 1e-9)
+    report("assoc_scale/sharded/N20000_K200_wall_speedup", None,
+           round(speedup, 2))
+    out["smoke_n20000"] = {"cold_1dev_s": t_1dev, "cold_sharded_s": t_pdev,
+                           "wall_speedup": speedup}
+
+    # N=50k/K=500 headline: cold convergence + warm churn re-solve
+    n, k = 50_000, 500
+    sc_big = make_large_scenario(n, k, seed=0, spread_m=60.0)
+    eng = FastAssociationEngine(sc_big, kind="fast", seed=0, profile="coarse",
+                                rel_tol=1e-2, compact="bucketed", shards=p)
+    tag = f"sharded_cold_{p}dev_n{n}_k{k}"
+    t0 = time.time()
+    eng.run("nearest", max_moves=8000, exchange_samples=0, finalize=False)
+    t_cold = time.time() - t0
+    stable = eng.last_moves < 8000
+    timings[tag] = t_cold
+    counts[tag] = p
+    report(f"assoc_scale/sharded/{tag}_s", None, round(t_cold, 3))
+    report(f"assoc_scale/sharded/{tag}_moves", None, eng.last_moves)
+    report(f"assoc_scale/sharded/{tag}_stable", None, stable)
+    assert stable, "N=50k headline run hit the move cap before stability"
+
+    sc2, delta = perturb_scenario(sc_big, seed=1, drift_m=60.0,
+                                  move_frac=0.01, depart_frac=0.005)
+    wtag = f"sharded_warm_{p}dev_n{n}_k{k}"
+    t0 = time.time()
+    eng.rerun_incremental(sc2, delta, max_moves=8000, exchange_samples=0,
+                          finalize=False)
+    t_warm = time.time() - t0
+    timings[wtag] = t_warm
+    counts[wtag] = p
+    report(f"assoc_scale/sharded/{wtag}_s", None, round(t_warm, 3))
+    report(f"assoc_scale/sharded/{wtag}_moves", None, eng.last_moves)
+    report(f"assoc_scale/sharded/{wtag}_wall_speedup", None,
+           round(t_cold / max(t_warm, 1e-9), 2))
+    out["headline_n50000"] = {
+        "cold_s": t_cold, "warm_s": t_warm, "stable": stable,
+        "warm_speedup_vs_cold": t_cold / max(t_warm, 1e-9),
+        "touched_devices": int(delta.touched_devices.sum())}
+    return out
+
+
 def run(report, quick: bool = False):
     t_start = time.time()
     timings: dict[str, float] = {}
@@ -384,6 +502,9 @@ def run(report, quick: bool = False):
                                  max_moves=4000, exchanges=0)}
         out["churn"] = {
             "N1000_K20": _churn(report, timings, 1000, 20, max_moves=2000)}
+
+    out["sharded"] = _sharded_scale(report, timings, quick)
+    out["device_counts"] = out["sharded"].get("device_counts", {})
 
     report("assoc_scale/runtime_s", None, round(time.time() - t_start, 3))
     return out

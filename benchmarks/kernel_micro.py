@@ -12,7 +12,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.resource_allocation import solve_exact, solve_fixed_point
+from repro.core.resource_allocation import (SCREEN_PROFILES, solve_exact,
+                                            solve_fixed_point,
+                                            solve_fixed_point_batched)
 from repro.core.cost_model import ra_constants
 from repro.core.scenario import make_scenario
 from repro.kernels import ops, ref
@@ -27,7 +29,57 @@ def _time(fn, *args, n=10):
     return (time.time() - t0) / n * 1e6
 
 
+def _batched_consts(c, g, key):
+    """Tile one server's (R,) RAConstants into a (G, R) batch with per-group
+    jitter (same factor on f_min/f_max keeps the box ordered)."""
+    scale = jax.random.uniform(key, (g, 1), minval=0.7, maxval=1.3)
+
+    def bc(x):
+        x = jnp.asarray(x)
+        if x.ndim == 0:
+            return jnp.broadcast_to(x, (g,))
+        return x[None, :] * scale
+
+    return jax.tree.map(bc, c)
+
+
+def _golden_rows(report, timings):
+    """Fused golden-section kernel vs the vmapped XLA fixed-point solver,
+    across the three screening profiles and candidate-batch widths.
+
+    On CPU the kernel runs in interpret mode, so its wall clock measures the
+    interpreter, not Mosaic — the XLA row is the CPU production path and the
+    derived maxerr column is the real payload (parity of the fused math)."""
+    sc = make_scenario(64, 4, seed=0)
+    c = ra_constants(sc.dev, sc.srv.bandwidth[0], sc.srv.noise[0], sc.lp)
+    key = jax.random.key(7)
+    for g in (64, 512, 4096):
+        kb, km = jax.random.split(jax.random.fold_in(key, g))
+        cg = _batched_consts(c, g, kb)
+        masks = jax.random.uniform(km, (g, c.a.shape[0])) < 0.75
+        masks = masks.at[:, 0].set(True)  # no empty groups
+        for profile, iters in SCREEN_PROFILES.items():
+            tag = f"{profile}_g{g}"
+            xla = solve_fixed_point_batched(cg, masks, backend="xla", **iters)
+            pal = solve_fixed_point_batched(cg, masks, backend="pallas",
+                                            **iters)
+            denom = jnp.maximum(jnp.abs(xla.cost), 1e-9)
+            err = float(jnp.max(jnp.abs(pal.cost - xla.cost) / denom))
+            us = _time(lambda cc=cg, m=masks, it=iters: jax.block_until_ready(
+                solve_fixed_point_batched(cc, m, backend="xla", **it).cost))
+            timings[f"golden_{tag}_xla_us"] = us
+            report(f"kernel/golden_section/{tag}_xla_us", us,
+                   f"maxrelerr={err:.2e}")
+            us = _time(lambda cc=cg, m=masks, it=iters: jax.block_until_ready(
+                solve_fixed_point_batched(cc, m, backend="pallas",
+                                          **it).cost), n=3)
+            timings[f"golden_{tag}_pallas_us"] = us
+            report(f"kernel/golden_section/{tag}_pallas_us", us,
+                   "interpret-mode")
+
+
 def run(report):
+    timings: dict[str, float] = {}
     rng = jax.random.key(0)
     ks = jax.random.split(rng, 8)
 
@@ -73,3 +125,6 @@ def run(report):
     us = _time(lambda: jax.block_until_ready(solve_exact(c, mask).cost), n=3)
     report("solver/exact_us", us,
            f"cost={float(solve_exact(c, mask).cost):.2f}")
+
+    _golden_rows(report, timings)
+    return {"timings": timings}

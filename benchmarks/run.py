@@ -19,6 +19,14 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, _ROOT)
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 
+# a fixed 4-device host mesh for the sharded assoc_scale section, matching
+# scripts/tier1.sh (must land in the environment before jax first imports;
+# a user-provided count wins)
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=4 "
+                               + os.environ.get("XLA_FLAGS", "")).strip()
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()

@@ -29,18 +29,23 @@ import sys
 
 # Timing keys that are legitimately one-sided on their first comparison:
 # benchmarks added by the bucketed (adaptive slot width) sweep, by the
-# churn (incremental re-convergence) regime, and by the live co-simulation
+# churn (incremental re-convergence) regime, by the live co-simulation
 # section (elastic re-association during training — anchored to its section
-# prefix so unrelated keys merely containing "live" are still flagged).
+# prefix so unrelated keys merely containing "live" are still flagged), and
+# by the sharded-sweep + golden-section kernel scaling points.
 # Matched by substring against "section/key" names.
-EXPECTED_NEW_SUBSTRINGS = ("bucketed", "churn", "live_hfel/")
+EXPECTED_NEW_SUBSTRINGS = ("bucketed", "churn", "live_hfel/", "golden",
+                           "sharded")
 
 
-def load_timings(path: str) -> dict[str, float] | None:
-    """Flatten every section's ``timings`` dict to {"section/key": seconds}.
+def load_timings(path: str) -> tuple[dict[str, float],
+                                     dict[str, int]] | None:
+    """Flatten every section's ``timings`` dict to {"section/key": seconds},
+    plus the matching device counts {"section/key": n} for keys a section
+    declares in its ``device_counts`` dict (the sharded assoc_scale points).
 
-    Returns None when the file is missing/unreadable, {} when it holds no
-    timing-bearing sections.
+    Returns None when the file is missing/unreadable, ({}, {}) when it
+    holds no timing-bearing sections.
     """
     if not os.path.exists(path):
         return None
@@ -48,13 +53,18 @@ def load_timings(path: str) -> dict[str, float] | None:
         with open(path) as f:
             data = json.load(f)
         out: dict[str, float] = {}
+        devs: dict[str, int] = {}
         for section, body in data.items():
             timings = body.get("timings") if isinstance(body, dict) else None
             if not isinstance(timings, dict):
                 continue
+            counts = body.get("device_counts")
+            counts = counts if isinstance(counts, dict) else {}
             for key, value in timings.items():
                 out[f"{section}/{key}"] = float(value)
-        return out
+                if key in counts:
+                    devs[f"{section}/{key}"] = int(counts[key])
+        return out, devs
     except (OSError, ValueError, TypeError) as e:
         print(f"bench_guard: unreadable results file {path} ({e})")
         return None
@@ -68,15 +78,17 @@ def main() -> int:
                     help="fail when current > ratio * baseline")
     args = ap.parse_args()
 
-    cur = load_timings(args.current)
-    if cur is None:
+    loaded = load_timings(args.current)
+    if loaded is None:
         print(f"bench_guard: no current results at {args.current} "
               "(run `python benchmarks/run.py --only assoc_scale` first)")
         return 1
+    cur, cur_devs = loaded
     if not cur:
         print("bench_guard: current results carry no timings")
         return 1
-    base = load_timings(args.baseline)
+    loaded = load_timings(args.baseline)
+    base, base_devs = loaded if loaded is not None else ({}, {})
     if not base:
         print(f"bench_guard: no baseline at {args.baseline}; nothing to "
               "compare (first run passes trivially)")
@@ -91,6 +103,14 @@ def main() -> int:
         print(header)
         print("-" * len(header))
         for name in shared:
+            # a sharded timing taken at a different device count is a
+            # different experiment, not a regression — report, never fail
+            nd_cur = cur_devs.get(name)
+            nd_base = base_devs.get(name)
+            if (nd_cur or nd_base) and nd_cur != nd_base:
+                print(f"{name:<{width}}  devices {nd_base} -> {nd_cur}: "
+                      "incomparable, skipped")
+                continue
             speedup = base[name] / max(cur[name], 1e-12)
             ratio = cur[name] / max(base[name], 1e-12)
             flag = "  <-- REGRESSION" if ratio > args.max_ratio else ""

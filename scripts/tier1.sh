@@ -25,5 +25,9 @@ if [[ "${1:-}" == "--fast" ]]; then
     shift
 fi
 export TIER1_SLOW_MARKER_LIMIT_S="${TIER1_SLOW_MARKER_LIMIT_S:-30}"
+# Pin a fixed host-device count so the shard_map sweep tests
+# (tests/test_assoc_sharded.py) see a deterministic 4-device mesh on this
+# CPU container; must be set before jax first imports.
+export XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}"
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -q -m "$MARKER" --strict-markers --durations=15 "$@"

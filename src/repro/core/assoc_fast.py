@@ -70,6 +70,34 @@ Swapped masks are built by XOR-ing one-hot slot encodings — an out-of-reach
 slot encodes as the all-zero row, so unavailable swaps are naturally inert
 and additionally gated.
 
+Sharded sweep (``shards=p``)
+----------------------------
+For the N=50k+ regimes one device cannot price a sweep fast enough, the
+same move-selection impl runs under ``shard_map`` over a ``p``-device mesh:
+every bucket's rows (servers) are padded to a multiple of ``p`` and
+partitioned along :data:`_SHARD_AXIS`, so each shard prices only its own
+servers' candidate scans and R_b+1-group refreshes. Membership, assignment
+and the (K, N) slot map stay replicated; per-shard (1, K) locator slices
+mark foreign servers with a sentinel bucket id that dispatches to the
+existing no-op refresh branch. Cross-shard consistency costs three
+collectives per concern — ``psum`` over disjoint single-owner contributions
+(bitwise exact: every other shard adds 0.0) for cache init / removal-toggle
+gathers / post-move ``cur`` re-replication, and one ``all_gather`` +
+lexicographic (delta, device-major order) fold that reproduces the
+sequential bucket fold's move selection exactly. A sharded sweep therefore
+applies the identical move sequence as the single-device program, and
+``shards=None`` (the default) does not even trace the collectives — the
+historical bit-exact graph is untouched. Sampled exchanges are not
+distributed (arbitrary server pairs), so sharded engines require
+``exchange_samples=0``. On CPU, multi-device meshes come from
+``XLA_FLAGS=--xla_force_host_platform_device_count=<p>``.
+
+``ra_backend="pallas"`` additionally routes every batched group solve of
+the ``fast`` kind through the fused golden-section kernel
+(:mod:`repro.kernels.golden_section`) instead of the vmapped op-by-op XLA
+graph — one kernel call per R_b+1-group refresh. It matches the XLA solver
+to float32 rounding (not bit-exactly), so the default stays ``"xla"``.
+
 Two-tier descent (:meth:`FastAssociationEngine.run_tiered`)
 -----------------------------------------------------------
 Screening profiles trade solve accuracy for sweep speed but leave a ~1% cost
@@ -104,6 +132,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
 
 from repro.core import resource_allocation as ra
 from repro.core.cost_model import cloud_delay, cloud_energy, global_cost
@@ -115,6 +146,11 @@ from repro.core.scenario import (ReachBuckets, ReachIndex, Scenario,
 
 _INF = jnp.inf
 _I32_BIG = np.iinfo(np.int32).max
+
+# Mesh axis name of the sharded sweep (see "Sharded sweep" in the module
+# docstring): server-bucket rows are partitioned along it, everything else
+# is replicated.
+_SHARD_AXIS = "servers"
 
 # ``compact="auto"`` promotes flat compaction to the bucketed adaptive-width
 # sweep when the flat map wastes more than this fraction of its slots on
@@ -152,13 +188,34 @@ def _bucket_cost_fn(kind, profile, bucket, cloud_const):
     return cost
 
 
+def _bucket_costs_fn(kind, profile, bucket, cloud_const, ra_backend):
+    """Batched ``(rows (M,), masks (M, R_b)) -> (M,) group costs`` for one
+    bucket. ``ra_backend="xla"`` vmaps the scalar :func:`_bucket_cost_fn`
+    (the historical, bit-exact path); ``"pallas"`` routes the ``fast`` kind
+    through the fused golden-section kernel, solving the whole batch in one
+    kernel call instead of a vmapped op-by-op graph."""
+    if ra_backend == "pallas":
+        iters = ra.SCREEN_PROFILES[profile]
+
+        def costs(rows, masks):
+            cb = jax.tree.map(lambda x: x[rows], bucket.consts)
+            sol = ra.solve_fixed_point_batched(cb, masks, backend="pallas",
+                                               **iters)
+            return sol.cost + jnp.where(jnp.any(masks, axis=-1),
+                                        cloud_const[bucket.servers[rows]],
+                                        0.0)
+
+        return costs
+    return jax.vmap(_bucket_cost_fn(kind, profile, bucket, cloud_const))
+
+
 @partial(jax.jit, donate_argnums=(0, 1),
          static_argnames=("kind", "profile", "permission", "min_residual",
-                          "max_moves", "exchange_samples"))
+                          "max_moves", "exchange_samples", "ra_backend"))
 def _run_device(member, assignment, key, buckets, ex_bucket, slot_of,
                 bucket_of, row_of, cloud_const, rel_tol, warm=None, *, kind,
                 profile, permission, min_residual, max_moves,
-                exchange_samples):
+                exchange_samples, ra_backend="xla"):
     """The whole adjustment loop as one device program — the single
     move-selection kernel behind every sweep space (dense / flat compact /
     bucketed; see module docstring).
@@ -181,16 +238,63 @@ def _run_device(member, assignment, key, buckets, ex_bucket, slot_of,
     is the surrogate total after move i (trace[0] = initial total), padded
     with NaN past ``n_moves``.
     """
+    return _run_device_impl(member, assignment, key, buckets, ex_bucket,
+                            slot_of, bucket_of, row_of, cloud_const, rel_tol,
+                            warm, axis=None, kind=kind, profile=profile,
+                            permission=permission, min_residual=min_residual,
+                            max_moves=max_moves,
+                            exchange_samples=exchange_samples,
+                            ra_backend=ra_backend)
+
+
+def _run_device_impl(member, assignment, key, buckets, ex_bucket, slot_of,
+                     bucket_of, row_of, cloud_const, rel_tol, warm, *, axis,
+                     kind, profile, permission, min_residual, max_moves,
+                     exchange_samples, ra_backend):
+    """Adjustment-loop body shared by the single-device jit
+    (:func:`_run_device`, ``axis=None`` — traced graph identical to the
+    historical kernel, so single-device results stay bit-exact) and the
+    ``shard_map`` wrapper (:func:`_sharded_runner`, ``axis=_SHARD_AXIS``).
+
+    Under sharding every bucket's rows are padded to a multiple of the mesh
+    size and partitioned along axis 0; padded rows carry the sentinel server
+    id K (scatters drop it, gathers clamp, ``exists``/``ok`` are False so it
+    never becomes a candidate). ``bucket_of``/``row_of`` arrive as this
+    shard's (1, K) locator slice whose sentinel bucket id ``len(buckets)``
+    means "server owned by another shard" — it dispatches to the same no-op
+    ``lax.switch`` branch that an unapplied move uses. Cross-shard state
+    stays consistent through three collectives per concern: ``psum`` of
+    disjoint single-owner contributions (cache init, removal-toggle gather,
+    post-move ``cur`` re-replication — bitwise exact, every summand but one
+    is 0.0) and an ``all_gather`` + lexicographic (delta, order) fold that
+    reproduces the sequential bucket fold's device-major move selection
+    exactly, so a sharded sweep applies the identical move sequence.
+    """
     k, n = member.shape
     nb = len(buckets)
     i32 = jnp.int32
     idx_n = jnp.arange(n)
+    if axis is not None:
+        if exchange_samples:
+            raise ValueError(
+                "sharded sweeps require exchange_samples=0: sampled "
+                "exchanges touch arbitrary server pairs and are not "
+                "distributed")
+        # this shard's locator slice: (1, K) -> (K,)
+        bucket_of = bucket_of.reshape(-1)
+        row_of = row_of.reshape(-1)
 
-    cost_vs = [jax.vmap(_bucket_cost_fn(kind, profile, bd, cloud_const))
+    def merge_sum(x):
+        """Re-replicate disjoint single-owner contributions (every non-owner
+        shard contributes exact 0.0, so the psum is bitwise the owner's
+        value); identity on the single-device path."""
+        return lax.psum(x, axis) if axis is not None else x
+
+    cost_vs = [_bucket_costs_fn(kind, profile, bd, cloud_const, ra_backend)
                for bd in buckets]
     eyes = [jnp.eye(bd.idx.shape[1], dtype=bool) for bd in buckets]
-    ex_cost_v = jax.vmap(_bucket_cost_fn(kind, profile, ex_bucket,
-                                         cloud_const))
+    ex_cost_v = _bucket_costs_fn(kind, profile, ex_bucket, cloud_const,
+                                 ra_backend)
     r_ex = ex_bucket.idx.shape[1]
 
     def base_rows(b, member, rows):
@@ -236,6 +340,7 @@ def _run_device(member, assignment, key, buckets, ex_bucket, slot_of,
         cur0 = cur0.at[bd.servers].set(costs[:, 0])
         toggles0.append(costs[:, 1:])
     toggles0 = tuple(toggles0)
+    cur0 = merge_sum(cur0)
 
     trace0 = jnp.full(max_moves + 1, jnp.nan, cur0.dtype)
     trace0 = trace0.at[0].set(jnp.sum(cur0))
@@ -253,7 +358,7 @@ def _run_device(member, assignment, key, buckets, ex_bucket, slot_of,
             v = toggles[b][jnp.clip(row_of[assign], 0, kb - 1),
                            jnp.clip(sl, 0, rb - 1)]
             out = jnp.where(bucket_of[assign] == b, v, out)
-        return out
+        return merge_sum(out)
 
     def can_join(srv, dev):
         """Availability gate for device(s) joining server(s), elementwise
@@ -321,6 +426,19 @@ def _run_device(member, assignment, key, buckets, ex_bucket, slot_of,
             best_order = jnp.where(take, b_order, best_order)
             t_dev = jnp.where(take, dev.reshape(-1)[p], t_dev)
             t_dst = jnp.where(take, bd.servers[p // rb], t_dst)
+        if axis is not None:
+            # merge the per-shard winners with the SAME lexicographic
+            # (delta, device-major order) rule the bucket fold above uses,
+            # so the sharded sweep selects the identical global move
+            deltas = lax.all_gather(best_delta, axis)          # (p,)
+            orders = lax.all_gather(best_order, axis)
+            g_delta = jnp.min(deltas)
+            g_tie = jnp.where(deltas == g_delta, orders, _I32_BIG)
+            shard = jnp.argmin(g_tie)
+            best_delta = g_delta
+            best_order = g_tie[shard]
+            t_dev = lax.all_gather(t_dev, axis)[shard]
+            t_dst = lax.all_gather(t_dst, axis)[shard]
         has_transfer = jnp.isfinite(best_delta)
         t_src = assign[t_dev]
 
@@ -387,6 +505,13 @@ def _run_device(member, assignment, key, buckets, ex_bucket, slot_of,
                 has_transfer, do_transfer, no_exchange, args)
         cur, toggles = refresh_server(member, rows[0], applied, cur, toggles)
         cur, toggles = refresh_server(member, rows[1], applied, cur, toggles)
+        if axis is not None:
+            # only the touched servers' owners re-solved their cur entries;
+            # re-replicate exactly those two (psum of owner-only values)
+            owned = bucket_of != nb
+            touched = jnp.zeros(k, bool).at[rows].set(applied)
+            fresh = merge_sum(jnp.where(touched & owned, cur, 0.0))
+            cur = jnp.where(touched, fresh, cur)
         moves = moves + applied.astype(i32)
         trace = trace.at[moves].set(
             jnp.where(applied, jnp.sum(cur), trace[moves]))
@@ -400,6 +525,44 @@ def _run_device(member, assignment, key, buckets, ex_bucket, slot_of,
     member, assignment, cur, toggles, moves, _, trace, _ = lax.while_loop(
         cond, body, state)
     return member, assignment, cur, toggles, moves, trace
+
+
+# jitted shard_map programs keyed on (mesh devices, bucket count, warm
+# presence, statics) — module-global like _run_device's jit cache, so
+# repeated engines on same-shaped scenarios reuse the compiled program
+_SHARDED_CACHE: dict = {}
+
+
+def _sharded_runner(mesh, n_buckets: int, has_warm: bool, *, kind, profile,
+                    permission, min_residual, max_moves, exchange_samples,
+                    ra_backend):
+    """The sharded counterpart of :func:`_run_device`: the same impl wrapped
+    in ``shard_map`` over ``mesh``. Bucket rows and the per-shard locator
+    slices are partitioned along :data:`_SHARD_AXIS`; membership, assignment
+    and all scalars are replicated, and the returned toggle caches reassemble
+    into the global padded layout (so ``rerun_incremental`` warm-starts work
+    unchanged across device counts). ``check_rep=False`` is required: jax
+    has no replication rule for ``lax.while_loop`` bodies, and the impl's
+    explicit psum/all_gather merges are what keep the replicated outputs
+    consistent."""
+    key = (tuple(mesh.devices.flat), n_buckets, has_warm, kind, profile,
+           permission, min_residual, max_moves, exchange_samples, ra_backend)
+    fn = _SHARDED_CACHE.get(key)
+    if fn is None:
+        body = partial(_run_device_impl, axis=_SHARD_AXIS, kind=kind,
+                       profile=profile, permission=permission,
+                       min_residual=min_residual, max_moves=max_moves,
+                       exchange_samples=exchange_samples,
+                       ra_backend=ra_backend)
+        shd, rep = P(_SHARD_AXIS), P()
+        warm_spec = (rep, shd, rep) if has_warm else rep
+        in_specs = (rep, rep, rep, shd, rep, rep, shd, shd, rep, rep,
+                    warm_spec)
+        out_specs = (rep, rep, rep, shd, rep, rep)
+        fn = jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_rep=False))
+        _SHARDED_CACHE[key] = fn
+    return fn
 
 
 def _dense_member(assignment: np.ndarray, active: np.ndarray,
@@ -533,14 +696,43 @@ class FastAssociationEngine:
     between engines), and all cost arithmetic is float32 on device rather
     than float64 on host. With ``exchange_samples=0`` the two engines are
     move-for-move identical on non-degenerate scenarios.
+
+    ``shards=p`` runs the sweep shard_mapped over the first ``p`` jax
+    devices (see "Sharded sweep" in the module docstring) — same move
+    sequence, server-partitioned pricing; ``ra_backend="pallas"`` prices
+    candidate groups through the fused golden-section kernel (``fast`` kind
+    only). Both default off, leaving the classic bit-exact program.
     """
 
     def __init__(self, sc: Scenario, *, kind: str = "fast",
                  permission: str = "utilitarian", min_residual_group: int = 2,
                  seed: int = 0, rel_tol: float = 1e-5,
-                 profile: str = "default", compact: bool | str = "auto"):
+                 profile: str = "default", compact: bool | str = "auto",
+                 shards: int | None = None, ra_backend: str = "xla"):
         assert permission in ("utilitarian", "pareto"), permission
         assert compact in (True, False, "auto", "bucketed"), compact
+        if ra_backend not in ("xla", "pallas"):
+            raise ValueError(f"ra_backend must be 'xla' or 'pallas', "
+                             f"got {ra_backend!r}")
+        if ra_backend == "pallas" and kind != "fast":
+            raise ValueError(
+                "ra_backend='pallas' fuses the golden-section fixed-point "
+                "solver and therefore requires kind='fast'")
+        self.ra_backend = ra_backend
+        # ``shards=None`` is the classic single-device program (bit-exact
+        # contract); ``shards=p`` runs the SAME impl shard_mapped over the
+        # first p devices — p=1 exercises the sharded program on one device
+        self.shards = None if shards is None else int(shards)
+        if self.shards is None:
+            self._mesh = None
+        else:
+            devs = jax.devices()
+            if not 1 <= self.shards <= len(devs):
+                raise ValueError(
+                    f"shards={self.shards} but only {len(devs)} device(s) "
+                    "visible (force more with XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=<p> on CPU)")
+            self._mesh = Mesh(np.array(devs[:self.shards]), (_SHARD_AXIS,))
         self.sc = sc
         self.kind = kind
         self.profile = profile
@@ -595,41 +787,74 @@ class FastAssociationEngine:
         (pure gathers); the expensive state is the toggle cache, which
         :meth:`rerun_incremental` preserves across calls to this."""
         k, n = self.sc.n_servers, self.sc.n_devices
+        servers = np.arange(k, dtype=np.int32)
         if self.compact == "bucketed":
             rbk = self.reach_buckets
-            self._buckets = tuple(
-                self._gather_bucket(b.servers, b.idx, b.valid, b.valid)
-                for b in rbk.buckets)
+            raw = [(b.servers, b.idx, b.valid, b.valid) for b in rbk.buckets]
             self._slot_of = jnp.asarray(rbk.slot)
-            self._bucket_of = jnp.asarray(rbk.bucket_of)
-            self._row_of = jnp.asarray(rbk.row_of)
+            bucket_of, row_of = rbk.bucket_of, rbk.row_of
             # exchanges hit arbitrary server pairs, so they are priced in
             # one shared flat (K, R_max) space (same slot numbering as the
             # per-bucket maps) instead of once per width bucket
             self._ex_bucket = self._gather_bucket(
-                np.arange(k, dtype=np.int32), self.reach.idx,
-                self.reach.valid, self.reach.valid)
+                servers, self.reach.idx, self.reach.valid, self.reach.valid)
         elif self.compact:
             r = self.reach
-            servers = np.arange(k, dtype=np.int32)
-            self._buckets = (
-                self._gather_bucket(servers, r.idx, r.valid, r.valid),)
+            raw = [(servers, r.idx, r.valid, r.valid)]
             self._slot_of = jnp.asarray(r.slot)
-            self._bucket_of = jnp.zeros(k, jnp.int32)
-            self._row_of = jnp.arange(k, dtype=jnp.int32)
-            self._ex_bucket = self._buckets[0]
+            bucket_of = np.zeros(k, np.int32)
+            row_of = servers
+            self._ex_bucket = None
         else:
             # dense sweep = identity index maps: every slot exists (so an
             # out-of-reach *current* member is still priced, like the host
             # reference engine), and availability only gates candidacy
-            servers = np.arange(k, dtype=np.int32)
             ident = np.broadcast_to(np.arange(n, dtype=np.int32), (k, n))
-            self._buckets = (self._gather_bucket(
-                servers, ident, np.ones((k, n), bool), self.avail),)
+            raw = [(servers, ident, np.ones((k, n), bool), self.avail)]
             self._slot_of = jnp.asarray(np.ascontiguousarray(ident))
-            self._bucket_of = jnp.zeros(k, jnp.int32)
-            self._row_of = jnp.arange(k, dtype=jnp.int32)
-            self._ex_bucket = self._buckets[0]
+            bucket_of = np.zeros(k, np.int32)
+            row_of = servers
+            self._ex_bucket = None
+        if self._mesh is None:
+            self._buckets = tuple(self._gather_bucket(*r) for r in raw)
+            self._bucket_of = jnp.asarray(bucket_of)
+            self._row_of = jnp.asarray(row_of)
+        else:
+            self._buckets, self._bucket_of, self._row_of = \
+                self._shard_space(raw, k)
+        if self._ex_bucket is None:
+            self._ex_bucket = (self._buckets[0] if self._mesh is None
+                               else self._gather_bucket(*raw[0]))
+
+    def _shard_space(self, raw: list, k: int):
+        """Pad every bucket's row maps to a multiple of the mesh size for
+        even partitioning along :data:`_SHARD_AXIS`, and build the per-shard
+        (p, K) locator slices. Padded rows carry the sentinel server id K
+        (their scatters drop, their gathers clamp, exists/ok stay False);
+        a locator entry of ``len(raw)`` marks a server owned by another
+        shard — the sweep's no-op switch branch."""
+        p = self.shards
+        nb = len(raw)
+        bucket_of = np.full((p, k), nb, np.int32)
+        row_of = np.zeros((p, k), np.int32)
+        padded = []
+        for b, (srvs, idx, exists, ok) in enumerate(raw):
+            srvs = np.asarray(srvs, np.int32)
+            kb = srvs.shape[0]
+            rows_tot = -(-kb // p) * p
+            extra = rows_tot - kb
+            width = idx.shape[1]
+            srvs_p = np.concatenate([srvs, np.full(extra, k, np.int32)])
+            idx_p = np.concatenate(
+                [idx, np.zeros((extra, width), idx.dtype)])
+            exists_p = np.concatenate([exists, np.zeros((extra, width), bool)])
+            ok_p = np.concatenate([ok, np.zeros((extra, width), bool)])
+            padded.append(self._gather_bucket(srvs_p, idx_p, exists_p, ok_p))
+            rows_per = rows_tot // p
+            grow = np.arange(kb)
+            bucket_of[grow // rows_per, srvs] = b
+            row_of[grow // rows_per, srvs] = grow % rows_per
+        return tuple(padded), jnp.asarray(bucket_of), jnp.asarray(row_of)
 
     def _gather_bucket(self, servers, idx, exists, ok) -> _Bucket:
         """Pre-gather every per-device RA quantity into this bucket's
@@ -832,7 +1057,8 @@ class FastAssociationEngine:
             src = carry[b] if b < len(carry) else None
             if src is None or cache["toggles"][src].shape != shape:
                 toggles_warm.append(jnp.zeros(shape, jnp.float32))
-                stale[np.asarray(bd.servers)] = True
+                srvs = np.asarray(bd.servers)
+                stale[srvs[srvs < k]] = True   # skip sharded padding rows
             else:
                 toggles_warm.append(jnp.asarray(cache["toggles"][src]))
         warm = (jnp.asarray(cache["cur"]), tuple(toggles_warm),
@@ -846,7 +1072,8 @@ class FastAssociationEngine:
             cold = FastAssociationEngine(
                 sc_new, kind=self.kind, permission=self.permission,
                 min_residual_group=self.min_residual, seed=self.seed,
-                rel_tol=self.rel_tol, profile=profile, compact=self.compact)
+                rel_tol=self.rel_tol, profile=profile, compact=self.compact,
+                shards=self.shards, ra_backend=self.ra_backend)
             ref = cold.run(assignment=self.last_repaired_assignment,
                            max_moves=max_moves,
                            exchange_samples=exchange_samples, finalize=False)
@@ -896,14 +1123,29 @@ class FastAssociationEngine:
                     "compact sweep requires every device assigned within "
                     f"reach; devices {bad.tolist()} are not (e.g. device "
                     f"{bad[0]} -> server {assignment[bad[0]]})")
-        member, assign, cur, toggles, moves, trace = _run_device(
-            jnp.asarray(member0), jnp.asarray(assignment, jnp.int32), key,
-            self._buckets, self._ex_bucket, self._slot_of, self._bucket_of,
-            self._row_of, self.cloud_const, jnp.float32(rel_tol), warm,
-            kind=self.kind,
-            profile=profile, permission=self.permission,
-            min_residual=self.min_residual, max_moves=max_moves,
-            exchange_samples=exchange_samples)
+        args = (jnp.asarray(member0), jnp.asarray(assignment, jnp.int32), key,
+                self._buckets, self._ex_bucket, self._slot_of,
+                self._bucket_of, self._row_of, self.cloud_const,
+                jnp.float32(rel_tol), warm)
+        if self._mesh is None:
+            member, assign, cur, toggles, moves, trace = _run_device(
+                *args, kind=self.kind,
+                profile=profile, permission=self.permission,
+                min_residual=self.min_residual, max_moves=max_moves,
+                exchange_samples=exchange_samples,
+                ra_backend=self.ra_backend)
+        else:
+            if exchange_samples:
+                raise ValueError(
+                    "sharded engines require exchange_samples=0: sampled "
+                    "exchanges touch arbitrary server pairs and are not "
+                    "distributed")
+            runner = _sharded_runner(
+                self._mesh, len(self._buckets), warm is not None,
+                kind=self.kind, profile=profile, permission=self.permission,
+                min_residual=self.min_residual, max_moves=max_moves,
+                exchange_samples=0, ra_backend=self.ra_backend)
+            member, assign, cur, toggles, moves, trace = runner(*args)
         member_np = np.asarray(member)
         self.last_state = {"member": member_np,
                            "cur_cost": np.asarray(cur)}

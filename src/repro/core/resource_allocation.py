@@ -287,6 +287,39 @@ def solve_fixed_point(c: RAConstants, mask: jnp.ndarray, *, n_golden: int = 48,
     return _finalize(c, mask, f, beta)
 
 
+def solve_fixed_point_batched(c: RAConstants, masks: jnp.ndarray, *,
+                              n_golden: int = 48, n_inner: int = 12,
+                              n_bracket: int = 60,
+                              backend: str = "xla") -> RASolution:
+    """Solve a BATCH of independent groups along the KKT deadline path.
+
+    ``c`` holds the constants batched over groups — leaves ``(G, R)``, ``w``
+    ``(G,)`` — and ``masks`` is ``(G, R)``. ``backend`` selects the engine:
+
+    * ``"xla"`` — :func:`solve_fixed_point` vmapped over the batch; the
+      traced per-group graph is identical to the scalar solver's, so results
+      are bit-identical to solving each group alone.
+    * ``"pallas"`` — the fused :mod:`repro.kernels.golden_section` kernel
+      (interpret mode off-TPU): the whole bracket + golden-section + inner
+      fixed-point stack runs as one VMEM-resident kernel per group block.
+      Matches the XLA path to float32 rounding, not bit-exactly — parity is
+      pinned at rtol 2e-4 on cost (tests/test_assoc_sharded.py).
+    """
+    if backend == "xla":
+        return jax.vmap(
+            lambda cc, m: solve_fixed_point(cc, m, n_golden=n_golden,
+                                            n_inner=n_inner,
+                                            n_bracket=n_bracket))(c, masks)
+    if backend == "pallas":
+        from repro.kernels import ops as _kops
+        f, beta, cost, deadline = _kops.golden_section_solve(
+            c.a, c.b, c.d, c.e, c.w, c.f_min, c.f_max, masks,
+            n_golden=n_golden, n_inner=n_inner, n_bracket=n_bracket)
+        return RASolution(f=f, beta=beta, cost=cost, deadline=deadline)
+    raise ValueError(f"unknown RA backend {backend!r}; "
+                     "expected 'xla' or 'pallas'")
+
+
 # ---------------------------------------------------------------------------
 # Solver 3 — exact nested parametric solver (beyond-paper)
 # ---------------------------------------------------------------------------

@@ -598,6 +598,28 @@ def update_reach_buckets(rbk: ReachBuckets, avail: np.ndarray, *,
                         row_of=row_of, slot=slot, r_max=sentinel), carry
 
 
+def pairwise_dist(srv_xy: np.ndarray, dev_xy: np.ndarray, *,
+                  chunk: int = 16_384) -> np.ndarray:
+    """(K, N) server-device distances, chunked along the device axis.
+
+    The obvious broadcast ``norm(srv_xy[:, None] - dev_xy[None], axis=-1)``
+    materializes a (K, N, 2) float64 intermediate — ~800 MB at K=500 /
+    N=100k — before reducing; chunking caps the intermediate at
+    (K, chunk, 2) while writing into the one (K, N) output that is needed
+    anyway. Chunk boundaries do not change any element's arithmetic, so the
+    result is bit-identical to the dense broadcast.
+    """
+    srv_xy = np.asarray(srv_xy, dtype=float)
+    dev_xy = np.asarray(dev_xy, dtype=float)
+    k, n = srv_xy.shape[0], dev_xy.shape[0]
+    out = np.empty((k, n), dtype=np.float64)
+    for lo in range(0, max(n, 1), chunk):
+        sl = slice(lo, min(lo + chunk, n))
+        out[:, sl] = np.linalg.norm(
+            srv_xy[:, None, :] - dev_xy[None, sl, :], axis=-1)
+    return out
+
+
 def channel_gain_from_distance(dist_m: np.ndarray) -> np.ndarray:
     """h = 10^(-PL/10), PL = 128.1 + 37.6 log10(d_km)."""
     d_km = np.maximum(dist_m, 1.0) / 1000.0
@@ -625,15 +647,19 @@ def make_large_scenario(n_devices: int, n_servers: int, *, seed: int = 0,
                         reach_m: float | None = None,
                         spread_m: float = 120.0,
                         lp: LearningParams | None = None) -> Scenario:
-    """Cluster-structured scenario for the large regimes (up to N~2000, K~50)
-    the association scaling benchmarks exercise.
+    """Cluster-structured scenario for the large regimes the association
+    scaling benchmarks exercise — construction is memory-safe up to
+    N~100k / K~500 (distances are computed in device-axis chunks, never
+    materializing a (K, N, 2) intermediate).
 
     Unlike :func:`make_scenario`'s fixed 500m box, the area grows with the
     server count (constant server density), devices drop as Gaussian clusters
     of width ``spread_m`` around a random anchor server, and ``reach_m``
     defaults to a *restricted* radius so availability is sparse — each device
     can reach only its nearby handful of servers, the realistic multi-cell
-    regime (every device is still guaranteed its nearest server).
+    regime (every device is still guaranteed its nearest server). At the
+    50k+ scales, tighten ``spread_m`` (e.g. 60) so per-server reach counts —
+    and with them the sweep's toggle-cache width — stay bounded as N grows.
     """
     rng = np.random.default_rng(seed)
     area = area_m if area_m is not None else 500.0 * np.sqrt(n_servers / 5.0)
@@ -653,7 +679,7 @@ def _assemble(rng: np.random.Generator, dev_xy: np.ndarray,
     f32 = np.float32
     n_devices = dev_xy.shape[0]
     n_servers = srv_xy.shape[0]
-    dist = np.linalg.norm(srv_xy[:, None, :] - dev_xy[None, :, :], axis=-1)
+    dist = pairwise_dist(srv_xy, dev_xy)
 
     data_bits = rng.uniform(5e6, 10e6, n_devices) * 8.0          # 5-10 MB
     density = rng.uniform(30.0, 100.0, n_devices)                # cycle/bit

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.golden_section import \
+    golden_section_solve as _golden_section_solve
 from repro.kernels.hier_aggregate import hier_aggregate as _hier_aggregate
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 from repro.kernels.ssd_scan import ssd_state_scan as _ssd_state_scan
@@ -73,6 +75,17 @@ def hier_aggregate_tree(trees: list, weights):
                    .astype(leaf.dtype))
         off += leaf.size
     return jax.tree.unflatten(treedef, out)
+
+
+def golden_section_solve(a, b, d, e, w, f_min, f_max, mask, *,
+                         n_golden: int = 48, n_inner: int = 12,
+                         n_bracket: int = 60, block_g: int = 256):
+    """Batched fused golden-section RA solve; see
+    :mod:`repro.kernels.golden_section` for shapes."""
+    return _golden_section_solve(a, b, d, e, w, f_min, f_max, mask,
+                                 n_golden=n_golden, n_inner=n_inner,
+                                 n_bracket=n_bracket, block_g=block_g,
+                                 interpret=not _on_tpu())
 
 
 def ssd_state_scan(states, decay, initial_state=None):

@@ -37,16 +37,57 @@ def _run(monkeypatch, tmp_path, current, baseline, *extra):
 
 def test_load_timings_flattens_sections(tmp_path):
     path = _write(tmp_path / "r.json", {
-        "assoc_scale": {"timings": {"a": 1.5, "b": 2.0}, "other": "x"},
+        "assoc_scale": {"timings": {"a": 1.5, "b": 2.0}, "other": "x",
+                        "device_counts": {"b": 4, "absent_key": 2}},
         "no_timings_section": {"cost": 3.0},
         "scalar_section": 7,
     })
-    assert bench_guard.load_timings(path) == {
-        "assoc_scale/a": 1.5, "assoc_scale/b": 2.0}
+    timings, devs = bench_guard.load_timings(path)
+    assert timings == {"assoc_scale/a": 1.5, "assoc_scale/b": 2.0}
+    # device counts attach only to keys that actually carry a timing
+    assert devs == {"assoc_scale/b": 4}
     assert bench_guard.load_timings(str(tmp_path / "nope.json")) is None
     bad = tmp_path / "bad.json"
     bad.write_text("{not json")
     assert bench_guard.load_timings(str(bad)) is None
+
+
+def test_device_count_mismatch_skips_comparison(monkeypatch, tmp_path,
+                                                capsys):
+    """A sharded timing re-measured at a different device count is a
+    different experiment: never compared, never a regression."""
+    rc = _run(monkeypatch, tmp_path,
+              {"assoc_scale": {"timings": {"sharded_cold": 9.0},
+                               "device_counts": {"sharded_cold": 2}}},
+              {"assoc_scale": {"timings": {"sharded_cold": 1.0},
+                               "device_counts": {"sharded_cold": 4}}})
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "devices 4 -> 2: incomparable, skipped" in out
+    assert "REGRESSION" not in out
+    # same device count on both sides compares (and fails) normally
+    rc = _run(monkeypatch, tmp_path,
+              {"assoc_scale": {"timings": {"sharded_cold": 9.0},
+                               "device_counts": {"sharded_cold": 4}}},
+              {"assoc_scale": {"timings": {"sharded_cold": 1.0},
+                               "device_counts": {"sharded_cold": 4}}})
+    assert rc == 1
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_sharded_and_golden_keys_expected_new(monkeypatch, tmp_path, capsys):
+    rc = _run(monkeypatch, tmp_path,
+              {"assoc_scale": {"timings": {"shared": 1.0,
+                                           "sharded_cold_n50000": 500.0}},
+               "kernels": {"timings": {"golden_default_g64_xla_us": 9.0}}},
+              {"assoc_scale": {"timings": {"shared": 1.0}}})
+    out = capsys.readouterr().out
+    assert rc == 0
+    expected_line = [l for l in out.splitlines()
+                     if l.startswith("expected new timings")]
+    assert len(expected_line) == 1
+    assert "sharded_cold_n50000" in expected_line[0]
+    assert "golden_default_g64_xla_us" in expected_line[0]
 
 
 def test_ok_within_ratio(monkeypatch, tmp_path, capsys):
