@@ -59,9 +59,9 @@ def _head_to_head_n60(report, timings, quick):
     n60: dict = {}
     t_ref = None
     if not quick:
-        t0 = time.time()
+        t0 = time.perf_counter()
         ref = AssociationEngine(sc, kind="fast", seed=0).run_batched("random")
-        t_ref = time.time() - t0
+        t_ref = time.perf_counter() - t0
         timings["ref_run_batched_n60_k5"] = t_ref
         report("assoc_scale/ref_run_batched/N60_K5_s", None, round(t_ref, 3))
         n60.update(ref_cost=ref.total_cost, ref_moves=ref.n_adjustments,
@@ -71,14 +71,14 @@ def _head_to_head_n60(report, timings, quick):
     # accuracy for the headline sweep speedup (final costs are always
     # re-evaluated at reference accuracy, so relgap is a true quality gap).
     for profile in ("default", "coarse"):
-        t0 = time.time()
+        t0 = time.perf_counter()
         fast = FastAssociationEngine(sc, kind="fast", seed=0,
                                      profile=profile).run("random")
-        t_cold = time.time() - t0
-        t0 = time.time()
+        t_cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
         fast = FastAssociationEngine(sc, kind="fast", seed=0,
                                      profile=profile).run("random")
-        t_warm = time.time() - t0
+        t_warm = time.perf_counter() - t0
         timings[f"fast_{profile}_cold_n60_k5"] = t_cold
         timings[f"fast_{profile}_warm_n60_k5"] = t_warm
         tag = f"N60_K5/{profile}"
@@ -135,12 +135,12 @@ def _compaction(report, timings, n, k, max_moves):
                            ("bucketed", "bucketed")):
         eng = FastAssociationEngine(sc, kind="fast", seed=0,
                                     profile="coarse", compact=compact)
-        t0 = time.time()
+        t0 = time.perf_counter()
         eng.run("nearest", max_moves=0, exchange_samples=0)
-        t_init = time.time() - t0
-        t0 = time.time()
+        t_init = time.perf_counter() - t0
+        t0 = time.perf_counter()
         res = eng.run("nearest", max_moves=max_moves, exchange_samples=0)
-        t_total = time.time() - t0
+        t_total = time.perf_counter() - t0
         moves = max(res.n_adjustments, 1)
         per_move = (t_total - t_init) / moves
         timings[f"{label}_permove_{tag.lower()}"] = per_move
@@ -177,17 +177,17 @@ def _two_tier(report, timings, n, k, max_moves, exchanges, rel_tol=1e-4):
     # timing cold would bias the wall ratio by run order.
     full_eng = FastAssociationEngine(sc, kind="fast", seed=0, rel_tol=rel_tol)
     full_eng.run("nearest", max_moves=max_moves, exchange_samples=exchanges)
-    t0 = time.time()
+    t0 = time.perf_counter()
     full = full_eng.run("nearest", max_moves=max_moves,
                         exchange_samples=exchanges)
-    t_full = time.time() - t0
+    t_full = time.perf_counter() - t0
     eng = FastAssociationEngine(sc, kind="fast", seed=0, rel_tol=rel_tol)
     eng.run_tiered("nearest", tiers="two_tier", max_moves=max_moves,
                    exchange_samples=exchanges)
-    t0 = time.time()
+    t0 = time.perf_counter()
     tiered = eng.run_tiered("nearest", tiers="two_tier", max_moves=max_moves,
                             exchange_samples=exchanges)
-    t_tier = time.time() - t0
+    t_tier = time.perf_counter() - t0
     relgap = (tiered.total_cost - full.total_cost) / full.total_cost
     timings[f"default_only_{tag.lower()}"] = t_full
     timings[f"two_tier_{tag.lower()}"] = t_tier
@@ -224,10 +224,10 @@ def _stress(report, timings, n, k, max_moves, exchanges, rel_tol=1e-3):
     # from different screening profiles, so trace[0] vs trace[-1] would mix
     # ~1% of profile bias into the descent improvement
     init_cost = eng.evaluate_assignment(init_assign)
-    t0 = time.time()
+    t0 = time.perf_counter()
     res = eng.run_tiered("nearest", tiers="two_tier", max_moves=max_moves,
                          exchange_samples=exchanges, assignment=init_assign)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     stable = all(m < max_moves for m in eng.last_tier_moves)
     timings[f"stress_two_tier_{tag.lower()}"] = dt
     report(f"assoc_scale/stress/{tag}_s", None, round(dt, 3))
@@ -262,9 +262,9 @@ def _churn(report, timings, n, k, max_moves, rel_tol=1e-3):
     tag = f"N{n}_K{k}"
     eng = FastAssociationEngine(sc, kind="fast", seed=0, profile="coarse",
                                 rel_tol=rel_tol, compact="auto")
-    t0 = time.time()
+    t0 = time.perf_counter()
     base = eng.run("nearest", max_moves=max_moves, exchange_samples=0)
-    t_base = time.time() - t0
+    t_base = time.perf_counter() - t0
     timings[f"churn_base_{tag.lower()}"] = t_base
     report(f"assoc_scale/churn/{tag}_base_s", None, round(t_base, 3))
     report(f"assoc_scale/churn/{tag}_base_moves", None, base.n_adjustments)
@@ -281,17 +281,17 @@ def _churn(report, timings, n, k, max_moves, rel_tol=1e-3):
     cold_eng = FastAssociationEngine(sc2, kind="fast", seed=0,
                                      profile="coarse", rel_tol=rel_tol,
                                      compact=eng.compact)
-    t0 = time.time()
+    t0 = time.perf_counter()
     cold = cold_eng.run("nearest", max_moves=max_moves, exchange_samples=0)
-    t_cold = time.time() - t0
+    t_cold = time.perf_counter() - t0
     timings[f"churn_cold_{tag.lower()}"] = t_cold
     report(f"assoc_scale/churn/{tag}_cold_s", None, round(t_cold, 3))
     report(f"assoc_scale/churn/{tag}_cold_moves", None, cold.n_adjustments)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     warm = eng.rerun_incremental(sc2, delta, max_moves=max_moves,
                                  exchange_samples=0)
-    t_warm = time.time() - t0
+    t_warm = time.perf_counter() - t0
     timings[f"churn_warm_{tag.lower()}"] = t_warm
     report(f"assoc_scale/churn/{tag}_warm_s", None, round(t_warm, 3))
     report(f"assoc_scale/churn/{tag}_warm_moves", None, warm.n_adjustments)
@@ -360,9 +360,9 @@ def _sharded_scale(report, timings, quick):
         "nearest", max_moves=6, exchange_samples=0)
     eng = FastAssociationEngine(sc, kind="fast", seed=0, profile="coarse",
                                 compact="bucketed", shards=p)
-    t0 = time.time()
+    t0 = time.perf_counter()
     res = eng.run("nearest", max_moves=6, exchange_samples=0)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     assert np.array_equal(ref.assignment, res.assignment), (
         "sharded stable point diverged from the classic sweep")
     timings["sharded_parity_n250_k10"] = dt
@@ -376,10 +376,10 @@ def _sharded_scale(report, timings, quick):
             make_large_scenario(n, k, seed=0, spread_m=60.0), kind="fast",
             seed=0, profile="coarse", rel_tol=1e-2, compact="bucketed",
             shards=shards)
-        t0 = time.time()
+        t0 = time.perf_counter()
         eng.run("nearest", max_moves=max_moves, exchange_samples=0,
                 finalize=False)
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         stable = eng.last_moves < max_moves
         timings[tag] = dt
         counts[tag] = shards or 1
@@ -403,9 +403,9 @@ def _sharded_scale(report, timings, quick):
     eng = FastAssociationEngine(sc_big, kind="fast", seed=0, profile="coarse",
                                 rel_tol=1e-2, compact="bucketed", shards=p)
     tag = f"sharded_cold_{p}dev_n{n}_k{k}"
-    t0 = time.time()
+    t0 = time.perf_counter()
     eng.run("nearest", max_moves=8000, exchange_samples=0, finalize=False)
-    t_cold = time.time() - t0
+    t_cold = time.perf_counter() - t0
     stable = eng.last_moves < 8000
     timings[tag] = t_cold
     counts[tag] = p
@@ -417,10 +417,10 @@ def _sharded_scale(report, timings, quick):
     sc2, delta = perturb_scenario(sc_big, seed=1, drift_m=60.0,
                                   move_frac=0.01, depart_frac=0.005)
     wtag = f"sharded_warm_{p}dev_n{n}_k{k}"
-    t0 = time.time()
+    t0 = time.perf_counter()
     eng.rerun_incremental(sc2, delta, max_moves=8000, exchange_samples=0,
                           finalize=False)
-    t_warm = time.time() - t0
+    t_warm = time.perf_counter() - t0
     timings[wtag] = t_warm
     counts[wtag] = p
     report(f"assoc_scale/sharded/{wtag}_s", None, round(t_warm, 3))
@@ -435,7 +435,7 @@ def _sharded_scale(report, timings, quick):
 
 
 def run(report, quick: bool = False):
-    t_start = time.time()
+    t_start = time.perf_counter()
     timings: dict[str, float] = {}
     out: dict = {"timings": timings, "quick": quick}
 
@@ -454,17 +454,17 @@ def run(report, quick: bool = False):
         # below deliberately compares the FLAT sweep against the bucketed one
         eng = FastAssociationEngine(sc, kind="fast", seed=0, profile="coarse",
                                     compact=True)
-        t0 = time.time()
+        t0 = time.perf_counter()
         res = eng.run("nearest", max_moves=6, exchange_samples=0)
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         timings["quick_compact_n250_k10"] = dt
         report("assoc_scale/quick/N250_K10_s", None, round(dt, 3))
         report("assoc_scale/quick/N250_K10_moves", None, res.n_adjustments)
         beng = FastAssociationEngine(sc, kind="fast", seed=0,
                                      profile="coarse", compact="bucketed")
-        t0 = time.time()
+        t0 = time.perf_counter()
         bres = beng.run("nearest", max_moves=6, exchange_samples=0)
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         timings["quick_bucketed_n250_k10"] = dt
         report("assoc_scale/quick/N250_K10_bucketed_s", None, round(dt, 3))
         report("assoc_scale/quick/N250_K10_bucketed_moves", None,
@@ -478,10 +478,10 @@ def run(report, quick: bool = False):
         # quick mode exercises the warm-init dispatch + parity end to end
         sc2, delta = perturb_scenario(sc, seed=1, drift_m=60.0,
                                       move_frac=0.05, depart_frac=0.02)
-        t0 = time.time()
+        t0 = time.perf_counter()
         wres = eng.rerun_incremental(sc2, delta, max_moves=6,
                                      exchange_samples=0, verify=True)
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         timings["quick_churn_n250_k10"] = dt
         report("assoc_scale/quick/N250_K10_churn_s", None, round(dt, 3))
         report("assoc_scale/quick/N250_K10_churn_moves", None,
@@ -506,5 +506,5 @@ def run(report, quick: bool = False):
     out["sharded"] = _sharded_scale(report, timings, quick)
     out["device_counts"] = out["sharded"].get("device_counts", {})
 
-    report("assoc_scale/runtime_s", None, round(time.time() - t_start, 3))
+    report("assoc_scale/runtime_s", None, round(time.perf_counter() - t_start, 3))
     return out

@@ -22,11 +22,11 @@ from repro.kernels import ops, ref
 
 def _time(fn, *args, n=10):
     fn(*args)  # warm
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(n):
         out = fn(*args)
     jax.block_until_ready(out)
-    return (time.time() - t0) / n * 1e6
+    return (time.perf_counter() - t0) / n * 1e6
 
 
 def _batched_consts(c, g, key):

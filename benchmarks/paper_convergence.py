@@ -10,7 +10,7 @@ from repro.core.edge_association import AssociationEngine
 
 
 def run(report):
-    t0 = time.time()
+    t0 = time.perf_counter()
     iters_n = []
     for n in [15, 30, 45, 60]:
         sc = make_scenario(n, 5, seed=0)
@@ -23,5 +23,5 @@ def run(report):
         res = AssociationEngine(sc, kind="fast", seed=0).run_batched("random")
         iters_k.append(res.n_adjustments)
         report(f"fig6/adjustments/K{k}", None, res.n_adjustments)
-    report("paper_convergence/runtime_s", None, round(time.time() - t0, 3))
+    report("paper_convergence/runtime_s", None, round(time.perf_counter() - t0, 3))
     return {"fig5": iters_n, "fig6": iters_k}

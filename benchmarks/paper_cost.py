@@ -34,7 +34,7 @@ def cost_ratio_sweep(points, *, vary: str, fixed: int, seeds=(0, 1)):
 
 
 def run(report):
-    t0 = time.time()
+    t0 = time.perf_counter()
     fig3_points = [15, 30, 60]
     fig3 = cost_ratio_sweep(fig3_points, vary="devices", fixed=5, seeds=(0,))
     for i, p in enumerate(fig3_points):
@@ -51,6 +51,6 @@ def run(report):
     # comp/greedy/random/comm/proportional)
     hfel_mean = np.mean(fig3["hfel"])
     report("fig3/hfel_vs_uniform_mean", None, round(float(hfel_mean), 4))
-    report("paper_cost/runtime_s", None, round(time.time() - t0, 3))
+    report("paper_cost/runtime_s", None, round(time.perf_counter() - t0, 3))
     return {"fig3": fig3, "fig4": fig4,
             "fig3_points": fig3_points, "fig4_points": fig4_points}

@@ -45,13 +45,13 @@ def main():
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
     out = [tok]
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(args.new_tokens):
         logits, cache = step(params, cache, tok)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out.append(tok)
     jax.block_until_ready(tok)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     total = args.new_tokens * args.batch
     print(f"{args.arch} (reduced): {total} tokens in {dt:.2f}s "
           f"-> {total/dt:.1f} tok/s (batch={args.batch})")

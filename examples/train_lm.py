@@ -62,7 +62,10 @@ def main():
     mgr = CheckpointManager(args.ckpt_dir, keep=2)
 
     @jax.jit
+    # hfellint: disable=HFEL006 -- pods alias one params pytree after init
     def train_step(params, opt_state, step, tokens):
+        # (and after every cloud sync): donating pod p's buffers would
+        # invalidate the other pods' step inputs
         loss, g = jax.value_and_grad(model.loss)(params, {"tokens": tokens})
         upd, opt_state = opt.update(g, opt_state, params, step)
         return apply_updates(params, upd), opt_state, loss
@@ -75,7 +78,7 @@ def main():
         start = s
         print(f"resumed from checkpoint at step {start}")
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     for step in range(start, args.steps):
         losses = []
         for p in range(args.pods):
@@ -91,7 +94,7 @@ def main():
         if step % 10 == 0 or step == args.steps - 1:
             lvl = sched.level(step).name
             print(f"step {step:4d} loss {sum(losses)/len(losses):.4f} "
-                  f"sync={lvl} ({(time.time()-t0):.1f}s)")
+                  f"sync={lvl} ({(time.perf_counter()-t0):.1f}s)")
     mgr.wait()
     print("done.")
 

@@ -25,6 +25,11 @@ if [[ "${1:-}" == "--fast" ]]; then
     shift
 fi
 export TIER1_SLOW_MARKER_LIMIT_S="${TIER1_SLOW_MARKER_LIMIT_S:-30}"
+# hfellint gate: the static-analysis pass (scripts/lint.py, rules in
+# src/repro/analysis/rules.py) must report zero findings beyond
+# lint_baseline.json before any tests run — in --fast mode too. It is
+# jax-free and finishes in ~2s; see experiments/lint_rules.md.
+python scripts/lint.py --check
 # Pin a fixed host-device count so the shard_map sweep tests
 # (tests/test_assoc_sharded.py) see a deterministic 4-device mesh on this
 # CPU container; must be set before jax first imports.

@@ -1,0 +1,18 @@
+"""hfellint: repo-specific static analysis + the recompilation sentinel.
+
+Static side (stdlib-only, no jax import):
+  * :mod:`repro.analysis.rules`    — the HFEL001-006 AST rules
+  * :mod:`repro.analysis.engine`   — file walking, pragma suppression
+  * :mod:`repro.analysis.baseline` — fingerprint baseline diffing
+
+Dynamic side (imports jax, keep it out of the lint fast path):
+  * :mod:`repro.analysis.recompile` — ``CompileLog``, the jit-compile-event
+    capture behind the tier-1 recompilation-sentinel test
+"""
+
+from repro.analysis.baseline import (baseline_counts, diff_against_baseline,
+                                     load_baseline, save_baseline)
+from repro.analysis.engine import Finding, lint_paths, lint_source
+
+__all__ = ["Finding", "lint_paths", "lint_source", "load_baseline",
+           "save_baseline", "baseline_counts", "diff_against_baseline"]

@@ -1,0 +1,92 @@
+"""Recompilation sentinel: capture jax compile events for budget assertions.
+
+The static rules keep the jitted code cache-FRIENDLY; this module checks the
+caches actually HIT. With ``jax_log_compiles`` enabled, jax logs one
+``"Compiling <name> with global shapes and types ..."`` WARNING per real XLA
+compilation (from ``jax._src.interpreters.pxla``); cache hits log nothing.
+:class:`CompileLog` attaches a handler to that logger for the duration of a
+``with`` block and records each compiled function's name, so a test can
+assert a fixed compile budget for a cold-run -> churn -> warm-rerun cycle —
+the PR-6 contract that ``_run_device``'s module-global jit cache and
+``_SHARDED_CACHE`` make repeat same-shape solves compile-free.
+
+Used by the ``compile_log`` pytest fixture (tests/conftest.py) and the
+tier-1 sentinel test (tests/test_recompile_sentinel.py). Unlike the rest of
+:mod:`repro.analysis`, this module imports jax — keep it off the
+``scripts/lint.py`` fast path.
+"""
+
+from __future__ import annotations
+
+import logging
+import re
+
+# jax 0.4.x emits compile logs from the pxla module logger; dispatch is
+# included defensively for version drift. The regex filter keeps anything
+# else those loggers say out of the event list.
+_LOGGER_NAMES = ("jax._src.interpreters.pxla", "jax._src.dispatch")
+_COMPILE_RE = re.compile(r"^Compiling (\S+)")
+
+
+class _CompileHandler(logging.Handler):
+    def __init__(self, events: list[str]):
+        super().__init__(level=logging.DEBUG)
+        self._events = events
+
+    def emit(self, record: logging.LogRecord) -> None:
+        try:
+            m = _COMPILE_RE.match(record.getMessage())
+        except Exception:       # never let logging break the program under test
+            return
+        if m:
+            self._events.append(m.group(1))
+
+
+class CompileLog:
+    """Context manager recording one entry per real XLA compilation.
+
+    >>> with CompileLog() as log:
+    ...     run_cold()
+    ...     log.reset()
+    ...     run_warm_again()
+    ...     assert log.events == []    # every cache hit
+    """
+
+    def __init__(self):
+        self.events: list[str] = []
+        self._handler: _CompileHandler | None = None
+        self._prev_flag: bool | None = None
+
+    def __enter__(self) -> "CompileLog":
+        import jax
+
+        self._jax = jax
+        self._prev_flag = bool(jax.config.jax_log_compiles)
+        jax.config.update("jax_log_compiles", True)
+        self._handler = _CompileHandler(self.events)
+        self._prev_propagate = {}
+        for name in _LOGGER_NAMES:
+            lg = logging.getLogger(name)
+            lg.addHandler(self._handler)
+            # keep the (very chatty) compile logs out of stderr/pytest
+            # capture while we listen; restored on exit
+            self._prev_propagate[name] = lg.propagate
+            lg.propagate = False
+        return self
+
+    def __exit__(self, *exc) -> None:
+        for name in _LOGGER_NAMES:
+            lg = logging.getLogger(name)
+            lg.removeHandler(self._handler)
+            lg.propagate = self._prev_propagate[name]
+        self._jax.config.update("jax_log_compiles", self._prev_flag)
+
+    def reset(self) -> None:
+        self.events.clear()
+
+    def count(self, name_substring: str | None = None) -> int:
+        """Compile events seen (optionally filtered by function-name
+        substring, e.g. ``"_run_device"``)."""
+        if name_substring is None:
+            return len(self.events)
+        return sum(name_substring in e for e in self.events)

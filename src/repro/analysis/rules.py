@@ -1,0 +1,535 @@
+"""The HFEL lint rules: repo-specific determinism and jit-hygiene checks.
+
+Every headline claim in this repo is a bit-identical parity contract (warm
+vs cold re-solves, sharded vs single-device sweeps, pallas vs xla pricing),
+and each rule here machine-checks one way those contracts silently rot:
+
+HFEL001  unseeded ``np.random.*`` / ``default_rng()`` — module-level numpy
+         RNG state breaks run-to-run determinism.
+HFEL002  ``time.time()`` — non-monotonic under NTP; interval timing must use
+         ``time.perf_counter()`` (wall-clock uses get a pragma).
+HFEL003  host syncs (``float()``/``bool()``/``int()``/``.item()``/
+         ``np.asarray``) on traced values inside jitted scopes — a silent
+         device->host round trip, or a tracer error at a rarely-hit shape.
+HFEL004  Python ``if``/``while``/``for`` over traced values in jitted scopes
+         — trace-time branching bakes one branch into the compiled program.
+HFEL005  float64 inside ``src/repro/kernels`` or jitted scopes — the sweep's
+         cost arithmetic is float32 by contract; a stray float64 literal
+         flips comparison outcomes between backends.
+HFEL006  decorator-jitted functions with >= 4 traced array params and no
+         ``donate_argnums`` — large resident buffers double peak memory on
+         every sweep step.
+
+Jit-scope detection (documented heuristics, tuned to this repo's idioms):
+
+* decorator forms ``@jax.jit`` and ``@(functools.)partial(jax.jit, ...)``;
+* call forms ``jax.jit(f, ...)``, ``jax.jit(jax.vmap(f), ...)``,
+  ``shard_map(f, ...)``, ``pl.pallas_call(f, ...)`` — with one level of
+  local-variable resolution (``body = partial(impl, ...)`` then
+  ``shard_map(body, ...)`` marks ``impl``);
+* ``static_argnames`` / ``static_argnums`` and keywords bound by ``partial``
+  are static; by repo convention KEYWORD-ONLY params of jitted functions are
+  static configuration, not arrays (matches ``_run_device`` /
+  ``_run_device_impl`` / every Pallas kernel body);
+* nested ``def``s inherit the jitted scope; their positional params are
+  traced, their defaulted params are the static loop-capture idiom
+  (``lambda x, b=b: ...``).
+
+Taint: traced params, propagated through assignments and ``for`` targets,
+de-tainted by shape/dtype-like attribute reads (``.shape``, ``.ndim``,
+``.dtype``, ``.size``) and ``len()``. Comprehension generators and direct
+``for``-iteration over a param are NOT flagged by HFEL004: the repo iterates
+static-length tuples-of-arrays that way (``for bd in buckets``), which is
+unrolled at trace time on static structure — only derived array taint fires.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+from repro.analysis.engine import Finding
+
+# -- dotted-name helpers ------------------------------------------------------
+
+JIT_NAMES = {"jax.jit", "jit"}
+PARTIAL_NAMES = {"partial", "functools.partial"}
+# transparent wrappers: jit(vmap(f)) etc. resolve through to f
+WRAPPER_TAILS = ("jit", "vmap", "pmap", "grad", "value_and_grad",
+                 "checkpoint", "remat", "shard_map", "named_call")
+DETAINT_ATTRS = {"shape", "ndim", "dtype", "size", "nbytes", "aval",
+                 "sharding", "weak_type", "itemsize"}
+DETAINT_CALLS = {"len", "isinstance", "type", "hasattr", "getattr", "id",
+                 "repr", "str"}
+HOST_SYNC_BUILTINS = {"float", "bool", "int"}
+HOST_SYNC_DOTTED = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+                    "onp.asarray", "onp.array"}
+NP_RANDOM_PREFIXES = ("np.random.", "numpy.random.")
+SEEDED_CTOR_TAILS = {"default_rng", "Generator", "RandomState", "PCG64",
+                     "Philox", "SFC64", "MT19937"}
+
+
+def dotted(node: ast.AST) -> str | None:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jit(node: ast.AST) -> bool:
+    return dotted(node) in JIT_NAMES
+
+
+def _is_partial(node: ast.AST) -> bool:
+    return dotted(node) in PARTIAL_NAMES
+
+
+def _tail(name: str | None) -> str:
+    return name.rsplit(".", 1)[-1] if name else ""
+
+
+# -- jit-scope analysis -------------------------------------------------------
+
+@dataclass
+class JitScope:
+    """One function the analysis believes runs traced."""
+
+    node: ast.FunctionDef
+    form: str                       # "decorator" | "call" | "pallas"
+    static_names: set[str] = field(default_factory=set)
+    static_nums: set[int] = field(default_factory=set)
+    bound_positional: int = 0       # leading params consumed by partial()
+    donates: bool = False
+
+    def param_split(self) -> tuple[list[str], set[str]]:
+        """(traced positional param names, static param names)."""
+        a = self.node.args
+        positional = [p.arg for p in (a.posonlyargs + a.args)]
+        static = set(self.static_names)
+        static.update(p.arg for p in a.kwonlyargs)   # repo convention
+        for i, name in enumerate(positional):
+            if i in self.static_nums or i < self.bound_positional:
+                static.add(name)
+        if positional and positional[0] in ("self", "cls"):
+            static.add(positional[0])
+        traced = [p for p in positional if p not in static]
+        return traced, static
+
+
+def _jit_kwargs(call: ast.Call, scope: JitScope) -> None:
+    """Fold static_argnames/static_argnums/donate_* keywords into scope."""
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            for c in ast.walk(kw.value):
+                if isinstance(c, ast.Constant):
+                    if isinstance(c.value, str):
+                        scope.static_names.add(c.value)
+                    elif isinstance(c.value, int):
+                        scope.static_nums.add(c.value)
+        elif kw.arg in ("donate_argnums", "donate_argnames"):
+            scope.donates = True
+
+
+def _local_env(tree: ast.AST) -> dict[str, ast.expr]:
+    """name -> value for every simple single-target assignment anywhere.
+
+    Flat across scopes — a heuristic, but collisions between a jit-wrapped
+    callable alias and an unrelated name are vanishingly rare here."""
+    env: dict[str, ast.expr] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name):
+            env[node.targets[0].id] = node.value
+    return env
+
+
+def _resolve(expr: ast.expr, defs: dict[str, ast.FunctionDef],
+             env: dict[str, ast.expr], scope: JitScope,
+             depth: int = 0) -> ast.FunctionDef | None:
+    """Follow a callable expression to the FunctionDef it traces, through
+    Name aliases, ``partial`` (keywords become static params), and the
+    transparent jax wrappers."""
+    if depth > 4:
+        return None
+    if isinstance(expr, ast.Name):
+        if expr.id in defs:
+            return defs[expr.id]
+        if expr.id in env:
+            return _resolve(env[expr.id], defs, env, scope, depth + 1)
+        return None
+    if isinstance(expr, ast.Call):
+        name = dotted(expr.func)
+        if name in PARTIAL_NAMES and expr.args:
+            for kw in expr.keywords:
+                if kw.arg:
+                    scope.static_names.add(kw.arg)
+            scope.bound_positional += len(expr.args) - 1
+            return _resolve(expr.args[0], defs, env, scope, depth + 1)
+        if _tail(name) in WRAPPER_TAILS and expr.args:
+            if _tail(name) == "jit":
+                _jit_kwargs(expr, scope)
+            return _resolve(expr.args[0], defs, env, scope, depth + 1)
+    return None
+
+
+def find_jit_scopes(tree: ast.AST) -> list[JitScope]:
+    defs: dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs[node.name] = node
+    env = _local_env(tree)
+    scopes: dict[int, JitScope] = {}
+
+    def add(fn: ast.FunctionDef | None, scope: JitScope) -> None:
+        if fn is None:
+            return
+        scope.node = fn
+        prev = scopes.get(id(fn))
+        if prev is None:
+            scopes[id(fn)] = scope
+        else:   # merge: union statics, keep strongest donate signal
+            prev.static_names |= scope.static_names
+            prev.static_nums |= scope.static_nums
+            prev.bound_positional = max(prev.bound_positional,
+                                        scope.bound_positional)
+            prev.donates = prev.donates or scope.donates
+
+    # decorator forms
+    for fn in defs.values():
+        for dec in fn.decorator_list:
+            if _is_jit(dec):
+                add(fn, JitScope(fn, "decorator"))
+            elif isinstance(dec, ast.Call):
+                if _is_partial(dec.func) and dec.args and \
+                        _is_jit(dec.args[0]):
+                    scope = JitScope(fn, "decorator")
+                    _jit_kwargs(dec, scope)
+                    add(fn, scope)
+                elif _is_jit(dec.func):
+                    scope = JitScope(fn, "decorator")
+                    _jit_kwargs(dec, scope)
+                    add(fn, scope)
+
+    # call forms: jax.jit(f, ...), shard_map(f, ...), pl.pallas_call(f, ...)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted(node.func)
+        tail = _tail(name)
+        if tail == "jit" and name in JIT_NAMES and node.args:
+            scope = JitScope(None, "call")
+            _jit_kwargs(node, scope)
+            add(_resolve(node.args[0], defs, env, scope), scope)
+        elif tail == "shard_map" and node.args:
+            scope = JitScope(None, "call")
+            add(_resolve(node.args[0], defs, env, scope), scope)
+        elif tail == "pallas_call":
+            target = node.args[0] if node.args else next(
+                (kw.value for kw in node.keywords if kw.arg == "kernel"),
+                None)
+            if target is not None:
+                scope = JitScope(None, "pallas")
+                add(_resolve(target, defs, env, scope), scope)
+    return list(scopes.values())
+
+
+# -- taint --------------------------------------------------------------------
+
+def _expr_tainted(expr: ast.expr, taint: set[str]) -> bool:
+    if isinstance(expr, ast.Name):
+        return expr.id in taint
+    if isinstance(expr, ast.Attribute):
+        if expr.attr in DETAINT_ATTRS:
+            return False
+        return _expr_tainted(expr.value, taint)
+    if isinstance(expr, ast.Call):
+        name = dotted(expr.func)
+        if name in DETAINT_CALLS or _tail(name) in DETAINT_CALLS:
+            return False
+        if _expr_tainted(expr.func, taint):
+            return True
+        return any(_expr_tainted(a, taint) for a in expr.args) or \
+            any(_expr_tainted(kw.value, taint) for kw in expr.keywords)
+    if isinstance(expr, ast.Subscript):
+        return _expr_tainted(expr.value, taint)
+    if isinstance(expr, ast.Constant):
+        return False
+    if isinstance(expr, (ast.Lambda, ast.FunctionDef)):
+        return False
+    return any(_expr_tainted(c, taint) for c in ast.iter_child_nodes(expr)
+               if isinstance(c, ast.expr))
+
+
+def _target_names(target: ast.expr) -> list[str]:
+    if isinstance(target, ast.Name):
+        return [target.id]
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out: list[str] = []
+        for el in target.elts:
+            out.extend(_target_names(el))
+        return out
+    if isinstance(target, ast.Starred):
+        return _target_names(target.value)
+    return []
+
+
+def _scope_taint(scope: JitScope) -> tuple[set[str], set[str]]:
+    """(tainted names, root param names) after propagating through the
+    scope's body — one shared namespace for the root and its nested defs."""
+    traced, _static = scope.param_split()
+    taint = set(traced)
+    params = set(traced)
+    for inner in ast.walk(scope.node):
+        if isinstance(inner, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                inner is not scope.node:
+            a = inner.args
+            n_defaults = len(a.defaults)
+            positional = a.posonlyargs + a.args
+            for i, p in enumerate(positional):
+                # defaulted params are the static capture idiom (b=b)
+                if i < len(positional) - n_defaults:
+                    taint.add(p.arg)
+                    params.add(p.arg)
+    # two passes approximate the fixpoint for forward-then-backward flows
+    for _ in range(2):
+        for node in ast.walk(scope.node):
+            if isinstance(node, ast.Assign):
+                if _expr_tainted(node.value, taint):
+                    for t in node.targets:
+                        taint.update(_target_names(t))
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                if node.value is not None and \
+                        _expr_tainted(node.value, taint):
+                    taint.update(_target_names(node.target))
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                if _expr_tainted(node.iter, taint):
+                    taint.update(_target_names(node.target))
+            elif isinstance(node, ast.withitem):
+                pass
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                for gen in node.generators:
+                    if _expr_tainted(gen.iter, taint):
+                        taint.update(_target_names(gen.target))
+    return taint, params
+
+
+# -- the rules ----------------------------------------------------------------
+
+def _finding(rule: str, path: str, lines: list[str], node: ast.AST,
+             message: str) -> Finding:
+    lineno = getattr(node, "lineno", 1)
+    line = lines[lineno - 1].strip() if lineno <= len(lines) else ""
+    return Finding(rule, path, lineno, getattr(node, "col_offset", 0),
+                   message, line)
+
+
+def rule_hfel001(tree: ast.AST, path: str, lines: list[str]) -> list[Finding]:
+    """Unseeded numpy RNG: module-level samplers, or generator constructors
+    called without a seed."""
+    out: list[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted(node.func)
+        if name is None:
+            if isinstance(node.func, ast.Name) and \
+                    node.func.id == "default_rng" and not node.args:
+                out.append(_finding(
+                    "HFEL001", path, lines, node,
+                    "default_rng() without a seed — pass an explicit seed "
+                    "so runs are reproducible"))
+            continue
+        if not name.startswith(NP_RANDOM_PREFIXES):
+            if isinstance(node.func, ast.Name) and \
+                    name == "default_rng" and not node.args:
+                out.append(_finding(
+                    "HFEL001", path, lines, node,
+                    "default_rng() without a seed — pass an explicit seed "
+                    "so runs are reproducible"))
+            continue
+        tail = _tail(name)
+        if tail in SEEDED_CTOR_TAILS:
+            seeded = bool(node.args) and not (
+                isinstance(node.args[0], ast.Constant)
+                and node.args[0].value is None)
+            seeded = seeded or any(kw.arg == "seed" for kw in node.keywords)
+            if not seeded:
+                out.append(_finding(
+                    "HFEL001", path, lines, node,
+                    f"np.random.{tail}() without a seed — pass an explicit "
+                    "seed so runs are reproducible"))
+        elif tail != "seed":
+            out.append(_finding(
+                "HFEL001", path, lines, node,
+                f"np.random.{tail} uses numpy's module-level RNG state — "
+                "use a seeded np.random.default_rng(seed) generator"))
+    return out
+
+
+def rule_hfel002(tree: ast.AST, path: str, lines: list[str]) -> list[Finding]:
+    """time.time() — non-monotonic under NTP adjustment; interval timing
+    must use time.perf_counter() (pragma genuine wall-clock uses)."""
+    out: list[Finding] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and dotted(node.func) == "time.time":
+            out.append(_finding(
+                "HFEL002", path, lines, node,
+                "time.time() is non-monotonic (NTP) — use "
+                "time.perf_counter() for intervals, or pragma a genuine "
+                "wall-clock use"))
+    return out
+
+
+def rule_hfel003_004(tree: ast.AST, path: str, lines: list[str],
+                     scopes: list[JitScope]) -> list[Finding]:
+    out: list[Finding] = []
+    for scope in scopes:
+        taint, params = _scope_taint(scope)
+        for node in ast.walk(scope.node):
+            # HFEL003: host syncs on traced values
+            if isinstance(node, ast.Call):
+                name = dotted(node.func)
+                if isinstance(node.func, ast.Name) and \
+                        node.func.id in HOST_SYNC_BUILTINS and \
+                        len(node.args) == 1 and \
+                        _expr_tainted(node.args[0], taint):
+                    out.append(_finding(
+                        "HFEL003", path, lines, node,
+                        f"{node.func.id}() on a traced value inside jitted "
+                        f"`{scope.node.name}` forces a host sync (or a "
+                        "TracerError) — keep it on device"))
+                elif isinstance(node.func, ast.Attribute) and \
+                        node.func.attr == "item" and \
+                        _expr_tainted(node.func.value, taint):
+                    out.append(_finding(
+                        "HFEL003", path, lines, node,
+                        ".item() on a traced value inside jitted "
+                        f"`{scope.node.name}` forces a host sync"))
+                elif name in HOST_SYNC_DOTTED and node.args and \
+                        _expr_tainted(node.args[0], taint):
+                    out.append(_finding(
+                        "HFEL003", path, lines, node,
+                        f"{name}() on a traced value inside jitted "
+                        f"`{scope.node.name}` pulls the array to host — "
+                        "use jnp"))
+            # HFEL004: trace-time Python control flow on traced values
+            elif isinstance(node, ast.If):
+                if _branch_test_tainted(node.test, taint):
+                    out.append(_finding(
+                        "HFEL004", path, lines, node,
+                        "Python `if` on a traced value inside jitted "
+                        f"`{scope.node.name}` bakes one branch into the "
+                        "program — use jnp.where / lax.cond"))
+            elif isinstance(node, ast.While):
+                if _branch_test_tainted(node.test, taint):
+                    out.append(_finding(
+                        "HFEL004", path, lines, node,
+                        "Python `while` on a traced value inside jitted "
+                        f"`{scope.node.name}` — use lax.while_loop"))
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                if _for_iter_flagged(node.iter, taint, params):
+                    out.append(_finding(
+                        "HFEL004", path, lines, node,
+                        "Python `for` over a traced array inside jitted "
+                        f"`{scope.node.name}` unrolls at trace time — use "
+                        "lax.fori_loop / lax.scan"))
+    return out
+
+
+def _branch_test_tainted(test: ast.expr, taint: set[str]) -> bool:
+    # `x is None` / `x is not None` are static trace-time tests even on
+    # traced names (they dispatch on presence, not value)
+    if isinstance(test, ast.Compare) and all(
+            isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops):
+        return False
+    if isinstance(test, ast.Call):
+        name = dotted(test.func)
+        if name in DETAINT_CALLS or _tail(name) in DETAINT_CALLS:
+            return False
+    return _expr_tainted(test, taint)
+
+
+def _for_iter_flagged(it: ast.expr, taint: set[str],
+                      params: set[str]) -> bool:
+    """Direct iteration over a param is the repo's static-structure idiom
+    (tuples of per-bucket arrays unroll on static length); only DERIVED
+    array taint fires."""
+    if isinstance(it, ast.Name):
+        return it.id in taint and it.id not in params
+    if isinstance(it, ast.Call):
+        name = _tail(dotted(it.func))
+        if name in ("range", "enumerate", "zip", "reversed", "len"):
+            return any(_for_iter_flagged(a, taint, params) for a in it.args)
+    return _expr_tainted(it, taint)
+
+
+def rule_hfel005(tree: ast.AST, path: str, lines: list[str],
+                 scopes: list[JitScope]) -> list[Finding]:
+    """float64 creep into the float32 kernel/sweep contract."""
+    kernel_file = "src/repro/kernels/" in path
+
+    def scan(root: ast.AST, where: str) -> list[Finding]:
+        found: list[Finding] = []
+        for node in ast.walk(root):
+            if isinstance(node, ast.Attribute) and \
+                    node.attr in ("float64", "double"):
+                found.append(_finding(
+                    "HFEL005", path, lines, node,
+                    f"{node.attr} in {where} — the kernel/sweep path is "
+                    "float32 by parity contract"))
+            elif isinstance(node, ast.Constant) and \
+                    node.value in ("float64", "f8", ">f8", "<f8"):
+                found.append(_finding(
+                    "HFEL005", path, lines, node,
+                    f"dtype literal {node.value!r} in {where} — the "
+                    "kernel/sweep path is float32 by parity contract"))
+        return found
+
+    if kernel_file:
+        return scan(tree, "kernel code")
+    out: list[Finding] = []
+    seen: set[tuple[int, int]] = set()
+    for scope in scopes:
+        for f in scan(scope.node, f"jitted `{scope.node.name}`"):
+            if (f.lineno, f.col) not in seen:
+                seen.add((f.lineno, f.col))
+                out.append(f)
+    return out
+
+
+#: traced-param count at or above which a decorator-jitted function is
+#: expected to declare donation (the repo's large-buffer sweeps all qualify)
+HFEL006_MIN_TRACED = 4
+
+
+def rule_hfel006(tree: ast.AST, path: str, lines: list[str],
+                 scopes: list[JitScope]) -> list[Finding]:
+    out: list[Finding] = []
+    for scope in scopes:
+        if scope.form != "decorator" or scope.donates:
+            continue
+        traced, _ = scope.param_split()
+        if len(traced) >= HFEL006_MIN_TRACED:
+            out.append(_finding(
+                "HFEL006", path, lines, scope.node,
+                f"jitted `{scope.node.name}` takes {len(traced)} traced "
+                "params with no donate_argnums — donate the large resident "
+                "buffers or pragma why they must survive the call"))
+    return out
+
+
+def run_rules(tree: ast.AST, path: str, lines: list[str]) -> list[Finding]:
+    scopes = find_jit_scopes(tree)
+    out: list[Finding] = []
+    out += rule_hfel001(tree, path, lines)
+    out += rule_hfel002(tree, path, lines)
+    out += rule_hfel003_004(tree, path, lines, scopes)
+    out += rule_hfel005(tree, path, lines, scopes)
+    out += rule_hfel006(tree, path, lines, scopes)
+    return out

@@ -51,6 +51,7 @@ def save_checkpoint(directory: str, step: int, tree: Any, *,
     arrays = [np.asarray(v) for _, v in leaves_with_paths]
 
     final = os.path.join(directory, f"step_{step:010d}")
+    # hfellint: disable=HFEL002 -- wall-clock uniqueness token, not an interval
     tmp = final + f".tmp.{os.getpid()}.{int(time.time() * 1e6)}"
     os.makedirs(tmp, exist_ok=True)
 

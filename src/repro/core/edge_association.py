@@ -96,6 +96,7 @@ def solve_group(kind: str, c: RAConstants, mask, *, random_f=None,
 
 
 @partial(jax.jit, static_argnames=("kind", "profile"))
+# hfellint: disable=HFEL006 -- consts/inv_dist are cache-resident constants
 def _solve_batch_pure(consts, random_f, inv_dist, server_ids, masks, *,
                       kind, profile):
     """Module-level vmapped group solve so the jit cache is shared across

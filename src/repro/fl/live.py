@@ -167,6 +167,7 @@ class LiveHFELRunner:
                  churn: dict | None = None, seed: int = 0,
                  kind: str = "fast", profile: str = "coarse",
                  rel_tol: float = 1e-3, compact: bool | str = "auto",
+                 shards: int | None = None, ra_backend: str = "xla",
                  max_moves: int = 10_000, exchange_samples: int = 0,
                  verify: bool = False,
                  bridge: DeviceClientBridge | None = None):
@@ -183,6 +184,14 @@ class LiveHFELRunner:
         self.profile = profile
         self.rel_tol = rel_tol
         self.compact = compact
+        # sharded-sweep engines require the deterministic no-exchange path
+        # (the PR-6 contract); fail at construction, not mid-run
+        if shards is not None and exchange_samples != 0:
+            raise ValueError(
+                "shards= engines run the deterministic sweep only — "
+                "set exchange_samples=0")
+        self.shards = shards
+        self.ra_backend = ra_backend
         self.max_moves = max_moves
         self.exchange_samples = exchange_samples
         self.verify = verify
@@ -219,7 +228,9 @@ class LiveHFELRunner:
         return FastAssociationEngine(sc, kind=self.kind, seed=self.seed,
                                      rel_tol=self.rel_tol,
                                      profile=self.profile,
-                                     compact=self.compact)
+                                     compact=self.compact,
+                                     shards=self.shards,
+                                     ra_backend=self.ra_backend)
 
     def _record(self, *, assoc_s: float, swapped: bool, moves: int,
                 arrived: int, departed: int) -> None:
@@ -325,6 +336,7 @@ def run_live(sc: Scenario, ds: FederatedDataset, *,
              model: str = "mlr", eval_every: int = 1, train_seed: int = 0,
              kind: str = "fast", profile: str = "coarse",
              rel_tol: float = 1e-3, compact: bool | str = "auto",
+             shards: int | None = None, ra_backend: str = "xla",
              max_moves: int = 10_000, exchange_samples: int = 0,
              verify: bool = False,
              bridge: DeviceClientBridge | None = None) -> LiveHistory:
@@ -337,11 +349,17 @@ def run_live(sc: Scenario, ds: FederatedDataset, *,
     seeded from ``seed`` and round index only, so different policies at the
     same ``seed`` face the exact same scenario trajectory — the controlled
     comparison the live benchmark and the parity tests rely on.
+
+    ``shards=p`` / ``ra_backend="pallas"`` reach every engine the policies
+    build (round-0, periodic-cold rebuilds, the warm engine), so the live
+    loop can run the PR-6 sharded sweep; the sharded path keeps the
+    bit-identical-assignment contract, hence identical histories.
     """
     runner = LiveHFELRunner(sc, ds.n_clients, policy=policy,
                             resolve_every=resolve_every, churn=churn,
                             seed=seed, kind=kind, profile=profile,
                             rel_tol=rel_tol, compact=compact,
+                            shards=shards, ra_backend=ra_backend,
                             max_moves=max_moves,
                             exchange_samples=exchange_samples, verify=verify,
                             bridge=bridge)

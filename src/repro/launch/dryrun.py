@@ -120,12 +120,12 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     }
 
     # --- proof compile: the FULL config, scanned layers --------------------
-    t0 = time.time()
+    t0 = time.perf_counter()
     bundle, lowered = _lower_step(cfg, shape, mesh, mode, sharding_mode)
-    result["lower_s"] = round(time.time() - t0, 1)
-    t0 = time.time()
+    result["lower_s"] = round(time.perf_counter() - t0, 1)
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    result["compile_s"] = round(time.time() - t0, 1)
+    result["compile_s"] = round(time.perf_counter() - t0, 1)
 
     mem = compiled.memory_analysis()
     if mem is not None:
@@ -141,14 +141,14 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     # --- cost probes --------------------------------------------------------
     if probe:
         ov1, ov2, full_units = _probe_layer_counts(cfg)
-        t0 = time.time()
+        t0 = time.perf_counter()
         c1 = _compile_costs(_lower_step(
             dataclasses.replace(cfg, scan_layers=False, **ov1),
             shape, mesh, mode, sharding_mode)[1])
         c2 = _compile_costs(_lower_step(
             dataclasses.replace(cfg, scan_layers=False, **ov2),
             shape, mesh, mode, sharding_mode)[1])
-        result["probe_s"] = round(time.time() - t0, 1)
+        result["probe_s"] = round(time.perf_counter() - t0, 1)
 
         def extrap(key):
             return max(c1[key] + (c2[key] - c1[key]) * (full_units - 1), 0.0)

@@ -63,11 +63,11 @@ def main():
             jnp.zeros((shape.global_batch,), jnp.int32),
             bundle.token_sharding)
 
-        t0 = time.time()
+        t0 = time.perf_counter()
         for _ in range(args.new_tokens):
             tok, cache = bundle.step_fn(params, cache, tok)
         jax.block_until_ready(tok)
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         total = args.new_tokens * shape.global_batch
         print(f"{args.arch}: {total} tokens in {dt:.2f}s "
               f"-> {total/dt:.1f} tok/s")

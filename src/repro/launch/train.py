@@ -93,7 +93,7 @@ def main():
         mgr = CheckpointManager(args.ckpt_dir, keep=2)
         pipe = TokenPipeline(cfg.vocab_size, shape.seq_len,
                              shape.global_batch, seed=args.seed)
-        t0 = time.time()
+        t0 = time.perf_counter()
         for k in range(args.steps):
             batch = {"tokens": jax.device_put(
                 jnp.asarray(next(pipe)),
@@ -107,7 +107,7 @@ def main():
                 mgr.save(k + 1, {"params": params})
             if k % 10 == 0 or k == args.steps - 1:
                 print(f"step {k:5d} loss {float(loss):.4f} "
-                      f"({time.time()-t0:.1f}s)", flush=True)
+                      f"({time.perf_counter()-t0:.1f}s)", flush=True)
         mgr.wait()
 
 

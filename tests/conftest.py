@@ -44,3 +44,16 @@ def pytest_collection_modifyitems(config, items):
     for item in items:
         if item.nodeid in SEED_KNOWN_FAILURES:
             item.add_marker(pytest.mark.seed_known_failure)
+
+
+@pytest.fixture
+def compile_log():
+    """One jax-compile event recorder per test (repro.analysis.recompile):
+    ``jax_log_compiles`` is enabled for the test's duration and every real
+    XLA compilation appends the compiled function's name to ``.events`` —
+    cache hits append nothing. Backs the recompilation-sentinel tier
+    (tests/test_recompile_sentinel.py)."""
+    from repro.analysis.recompile import CompileLog
+
+    with CompileLog() as log:
+        yield log

@@ -1,0 +1,372 @@
+"""hfellint fixture corpus: one known-violation and one known-clean snippet
+per rule, jit-scope detection across the repo's wrapping idioms, pragma
+suppression, baseline round-trip/idempotence, and the subprocess exit-code
+contract of scripts/lint.py."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis import (Finding, diff_against_baseline, lint_source,
+                            load_baseline, save_baseline)
+from repro.analysis.baseline import baseline_counts
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def lint(src, path="src/repro/snippet.py"):
+    return lint_source(path, textwrap.dedent(src))
+
+
+def rules_of(findings):
+    return [f.rule for f in findings]
+
+
+# -- HFEL001: unseeded numpy RNG ---------------------------------------------
+
+def test_hfel001_flags_module_level_samplers_and_unseeded_rng():
+    bad = lint("""
+        import numpy as np
+        x = np.random.rand(3)
+        rng = np.random.default_rng()
+        g = np.random.Generator(np.random.PCG64())
+    """)
+    assert rules_of(bad).count("HFEL001") >= 3
+
+
+def test_hfel001_passes_seeded_call_sites():
+    good = lint("""
+        import numpy as np
+        rng = np.random.default_rng(0)
+        rng2 = np.random.default_rng(seed=17)
+        y = rng.normal(size=3)
+    """)
+    assert "HFEL001" not in rules_of(good)
+
+
+# -- HFEL002: time.time for intervals ----------------------------------------
+
+def test_hfel002_flags_time_time_and_passes_perf_counter():
+    bad = lint("""
+        import time
+        t0 = time.time()
+        dt = time.time() - t0
+    """)
+    assert rules_of(bad) == ["HFEL002", "HFEL002"]
+    good = lint("""
+        import time
+        t0 = time.perf_counter()
+        dt = time.perf_counter() - t0
+    """)
+    assert good == []
+
+
+def test_hfel002_pragma_with_justification_suppresses():
+    src = """
+        import os, time
+        # hfellint: disable=HFEL002 -- wall-clock uniqueness token
+        tmp = f".tmp.{os.getpid()}.{int(time.time() * 1e6)}"
+    """
+    assert lint(src) == []
+
+
+def test_pragma_without_justification_is_reported_and_suppresses_nothing():
+    out = lint("""
+        import time
+        t0 = time.time()  # hfellint: disable=HFEL002
+    """)
+    assert sorted(rules_of(out)) == ["HFEL000", "HFEL002"]
+
+
+# -- HFEL003: host syncs in jitted scopes ------------------------------------
+
+def test_hfel003_flags_host_syncs_on_traced_values():
+    bad = lint("""
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x, y):
+            a = float(x)
+            b = y.sum().item()
+            c = np.asarray(x + y)
+            return a + b + c
+    """)
+    assert rules_of(bad).count("HFEL003") == 3
+
+
+def test_hfel003_passes_shape_reads_and_host_code():
+    good = lint("""
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            n = float(x.shape[0])
+            m = len(x)
+            return x * n * m
+
+        def host(x):
+            return float(x) + np.asarray(x).sum()
+    """)
+    assert "HFEL003" not in rules_of(good)
+
+
+def test_hfel003_sees_through_call_form_and_static_argnums():
+    bad = lint("""
+        import jax
+
+        def local_steps(params, x, n_steps):
+            return float(x)
+
+        step = jax.jit(jax.vmap(local_steps), static_argnums=2)
+    """)
+    assert rules_of(bad) == ["HFEL003"]
+    good = lint("""
+        import jax
+
+        def local_steps(params, x, n_steps):
+            return x * float(n_steps)
+
+        step = jax.jit(jax.vmap(local_steps), static_argnums=2)
+    """)
+    assert good == []
+
+
+def test_jit_scope_resolves_shard_map_partial_chain():
+    """The assoc_fast idiom: body = partial(impl, **statics), then
+    jax.jit(shard_map(body, ...)) — impl is a jitted scope, the partial's
+    keywords are static."""
+    bad = lint("""
+        import jax
+        from functools import partial
+        from jax.experimental.shard_map import shard_map
+
+        def impl(member, cur, *, axis, kind):
+            if cur > 0:
+                return member
+            return member + 1
+
+        def build(mesh):
+            body = partial(impl, axis="i", kind="fast")
+            return jax.jit(shard_map(body, mesh=mesh, in_specs=(),
+                                     out_specs=()))
+    """)
+    assert rules_of(bad) == ["HFEL004"]
+    good = lint("""
+        import jax
+        from functools import partial
+        from jax.experimental.shard_map import shard_map
+
+        def impl(member, cur, *, axis, kind):
+            if kind == "fast":
+                return member
+            return member + cur
+
+        def build(mesh):
+            body = partial(impl, axis="i", kind="fast")
+            return jax.jit(shard_map(body, mesh=mesh, in_specs=(),
+                                     out_specs=()))
+    """)
+    assert good == []
+
+
+# -- HFEL004: trace-time control flow ----------------------------------------
+
+def test_hfel004_flags_branching_on_traced_values():
+    bad = lint("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            while x < 3:
+                x = x + 1
+            for v in x * 2:
+                pass
+            return x
+    """)
+    assert rules_of(bad) == ["HFEL004", "HFEL004", "HFEL004"]
+
+
+def test_hfel004_allows_static_idioms():
+    good = lint("""
+        import jax
+        from functools import partial
+
+        @partial(jax.jit, static_argnames=("mode",))
+        def f(x, buckets, warm=None, *, mode, causal):
+            if warm is None:
+                x = x + 1
+            if mode == "fast":
+                x = x * 2
+            if causal:
+                x = x - 1
+            for bd in buckets:
+                x = x + bd
+            for i in range(len(x)):
+                x = x + i
+            if x.ndim == 2:
+                x = x.sum(0)
+            return x
+    """)
+    assert good == []
+
+
+# -- HFEL005: float64 creep ---------------------------------------------------
+
+def test_hfel005_flags_float64_in_kernel_files_and_jit_scopes():
+    kern = lint("""
+        import numpy as np
+
+        def setup():
+            return np.zeros(3, dtype=np.float64)
+    """, path="src/repro/kernels/fake_kernel.py")
+    assert rules_of(kern) == ["HFEL005"]
+    jit = lint("""
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            return x.astype("float64")
+    """)
+    assert rules_of(jit) == ["HFEL005"]
+
+
+def test_hfel005_allows_host_side_float64_outside_kernels():
+    good = lint("""
+        import numpy as np
+
+        def finalize(xs):
+            return np.asarray(xs, dtype=np.float64).sum()
+    """)
+    assert good == []
+
+
+# -- HFEL006: donation on large jitted signatures ----------------------------
+
+def test_hfel006_flags_many_traced_params_without_donation():
+    bad = lint("""
+        import jax
+
+        @jax.jit
+        def sweep(member, assignment, cur, toggles):
+            return member, assignment, cur, toggles
+    """)
+    assert rules_of(bad) == ["HFEL006"]
+
+
+def test_hfel006_passes_donation_small_signatures_and_statics():
+    good = lint("""
+        import jax
+        from functools import partial
+
+        @partial(jax.jit, donate_argnums=(0, 1))
+        def sweep(member, assignment, cur, toggles):
+            return member, assignment, cur, toggles
+
+        @jax.jit
+        def solve(c, mask):
+            return c, mask
+
+        @partial(jax.jit, static_argnames=("kind", "profile"))
+        def priced(consts, random_f, *, kind, profile):
+            return consts
+    """)
+    assert "HFEL006" not in rules_of(good)
+
+
+def test_syntax_error_is_a_finding_not_a_crash():
+    out = lint("def broken(:\n    pass\n")
+    assert rules_of(out) == ["HFEL000"]
+
+
+# -- baseline round-trip ------------------------------------------------------
+
+SRC_TWO_VIOLATIONS = """
+    import time
+    a = time.time()
+    b = time.time()
+"""
+
+
+def test_baseline_round_trip_and_diff(tmp_path):
+    findings = lint(SRC_TWO_VIOLATIONS)
+    assert len(findings) == 2
+    path = str(tmp_path / "baseline.json")
+    save_baseline(path, findings)
+    baseline = load_baseline(path)
+    new, stale = diff_against_baseline(findings, baseline)
+    assert new == [] and stale == []
+    # identical lines share one fingerprint, counted twice
+    assert sum(e["count"] for e in baseline.values()) == 2
+
+    # a THIRD identical violation exceeds the baselined count
+    findings3 = lint(SRC_TWO_VIOLATIONS + "    c = time.time()\n")
+    new, stale = diff_against_baseline(findings3, baseline)
+    assert [f.rule for f in new] == ["HFEL002"] and stale == []
+
+    # fixing one makes the baseline entry stale, never a failure
+    findings1 = lint("""
+        import time
+        a = time.time()
+    """)
+    new, stale = diff_against_baseline(findings1, baseline)
+    assert new == [] and len(stale) == 1
+
+
+def test_fix_baseline_is_idempotent(tmp_path):
+    findings = lint(SRC_TWO_VIOLATIONS)
+    p1, p2 = str(tmp_path / "b1.json"), str(tmp_path / "b2.json")
+    save_baseline(p1, findings)
+    save_baseline(p2, findings)
+    with open(p1) as f1, open(p2) as f2:
+        assert f1.read() == f2.read()
+    assert baseline_counts(findings) == load_baseline(p1)
+
+
+def test_fingerprint_is_line_number_independent():
+    a = Finding("HFEL002", "x.py", 10, 4, "m", "t0 = time.time()")
+    b = Finding("HFEL002", "x.py", 99, 0, "m", "t0 = time.time()")
+    c = Finding("HFEL002", "y.py", 10, 4, "m", "t0 = time.time()")
+    assert a.fingerprint() == b.fingerprint() != c.fingerprint()
+
+
+# -- scripts/lint.py subprocess contract -------------------------------------
+
+def _run_lint(*args):
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO_ROOT, "scripts", "lint.py"),
+         *args], capture_output=True, text=True, cwd=REPO_ROOT)
+
+
+def test_lint_script_exits_nonzero_on_seeded_violation(tmp_path):
+    viol = tmp_path / "viol.py"
+    viol.write_text("import numpy as np\nx = np.random.rand(3)\n")
+    baseline = tmp_path / "baseline.json"
+
+    r = _run_lint("--check", "--baseline", str(baseline), str(viol))
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "HFEL001" in r.stdout
+
+    # --fix-baseline swallows it; --check then passes and stays idempotent
+    r = _run_lint("--fix-baseline", "--baseline", str(baseline), str(viol))
+    assert r.returncode == 0, r.stdout + r.stderr
+    body = json.loads(baseline.read_text())
+    assert sum(e["count"] for e in body["findings"].values()) == 1
+    r = _run_lint("--check", "--baseline", str(baseline), str(viol))
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_repo_is_lint_clean_at_head():
+    """The tier-1 gate contract: scripts/lint.py --check exits 0 on HEAD
+    (slow tier: ~2s of AST parsing, and tier1.sh already runs the gate)."""
+    r = _run_lint("--check")
+    assert r.returncode == 0, r.stdout + r.stderr

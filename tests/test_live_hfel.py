@@ -51,6 +51,7 @@ def _live(sc, ds, policy, **kw):
 
 # -- (a) warm/cold parity at every swap point --------------------------------
 
+@pytest.mark.slow
 def test_warm_and_cold_policies_swap_bit_identically(sc, ds):
     warm = _live(sc, ds, "incremental-warm")
     cold = _live(sc, ds, "periodic-cold")
@@ -75,6 +76,7 @@ def test_incremental_warm_passes_engine_verify_gate(sc, ds):
 
 # -- (b) re-association beats (or ties) the frozen assignment ----------------
 
+@pytest.mark.slow
 def test_reassociation_cumulative_cost_beats_static(sc, ds):
     static = _live(sc, ds, "static")
     warm = _live(sc, ds, "incremental-warm", resolve_every=1)
@@ -255,6 +257,33 @@ def test_runner_rejects_bad_config(sc):
         LiveHFELRunner(sc, N, resolve_every=0)
     with pytest.raises(ValueError, match="maps 5 clients"):
         LiveHFELRunner(sc, 10, bridge=device_client_bridge(sc, 5))
+
+
+# -- sharded engine plumbing (PR-6 follow-on) --------------------------------
+
+def test_sharded_engine_plumbs_and_swaps_bit_identically(sc, ds):
+    """shards=/ra_backend= reach every engine the policies construct, and a
+    shards=1 live run keeps the bit-identical-assignment contract (hence an
+    identical history) vs the classic single-device path."""
+    runner = LiveHFELRunner(sc, N, shards=1, ra_backend="xla")
+    eng = runner._new_engine(sc)
+    assert eng.shards == 1 and eng.ra_backend == "xla"
+
+    kw = dict(rounds=3, resolve_every=1, local_iters=1, edge_iters=1)
+    base = _live(sc, ds, "incremental-warm", **kw)
+    shard = _live(sc, ds, "incremental-warm", shards=1, **kw)
+    assert shard.swap_rounds == base.swap_rounds
+    for r, ab, ash in zip(base.swap_rounds, base.swap_assignments,
+                          shard.swap_assignments):
+        np.testing.assert_array_equal(
+            ab, ash, err_msg=f"sharded swap diverged at round {r}")
+    np.testing.assert_allclose(shard.system_cost, base.system_cost,
+                               rtol=1e-6)
+
+
+def test_sharded_runner_rejects_exchange_sampling(sc):
+    with pytest.raises(ValueError, match="exchange_samples=0"):
+        LiveHFELRunner(sc, N, shards=1, exchange_samples=4)
 
 
 # -- the larger configuration, slow tier -------------------------------------

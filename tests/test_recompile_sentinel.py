@@ -1,0 +1,89 @@
+"""Recompilation sentinel: the dynamic half of the hfellint pass.
+
+The static rules (tests/test_lint.py) keep the jitted code cache-friendly;
+these tests assert the caches actually HIT, by counting real XLA compile
+events (``compile_log`` fixture over ``jax_log_compiles``) around
+FastAssociationEngine solve cycles.
+
+Compile budget (documented contract):
+
+* one cold-run -> churn -> warm-rerun cycle compiles ``_run_device`` at
+  most TWICE per sweep space — the cold-init variant and the warm-init
+  (toggle-cache-carrying) variant; every other compile in the cycle is
+  one-off eager-op warm-up, not per-cycle work;
+* an IDENTICAL repeat cycle (fresh engine, same scenario seed, same
+  statics) compiles NOTHING — zero events — because ``_run_device``'s jit
+  cache is module-global (PR-3) and keyed on shapes + static config only;
+* the sharded engine's repeat solve likewise compiles nothing thanks to the
+  PR-6 ``_SHARDED_CACHE`` keyed on (mesh, bucket shapes, statics); bypassing
+  that cache is OBSERVABLE — the sentinel records fresh compiles — which is
+  exactly the regression this tier exists to catch.
+"""
+
+import numpy as np
+import pytest
+
+import repro.core.assoc_fast as assoc_fast
+from repro.core.assoc_fast import FastAssociationEngine
+from repro.core.scenario import make_large_scenario, perturb_scenario
+
+N, K = 16, 3
+CHURN = dict(drift_m=60.0, move_frac=0.1, flip_frac=0.05, depart_frac=0.05)
+#: max ``_run_device`` compilations in one cold->churn->warm cycle:
+#: the cold-init variant + the warm-init variant
+RUN_DEVICE_BUDGET = 2
+
+
+def _cycle(compact, shards=None) -> np.ndarray:
+    """cold run -> one churn tick -> warm incremental rerun; returns the
+    warm stable point. Deterministic: fixed seeds, exchange_samples=0."""
+    sc = make_large_scenario(N, K, seed=0)
+    eng = FastAssociationEngine(sc, kind="fast", seed=0, profile="coarse",
+                                rel_tol=1e-3, compact=compact, shards=shards)
+    eng.run("nearest", max_moves=3, exchange_samples=0, finalize=False)
+    sc2, delta = perturb_scenario(sc, seed=1, **CHURN)
+    return np.asarray(eng.rerun_incremental(
+        sc2, delta, max_moves=3, exchange_samples=0, finalize=False))
+
+
+@pytest.mark.parametrize("compact", [False, True, "bucketed"],
+                         ids=["dense", "flat", "bucketed"])
+def test_cycle_compile_budget_and_global_jit_cache(compile_log, compact):
+    compile_log.reset()
+    first = _cycle(compact)
+    n_run_device = compile_log.count("_run_device")
+    assert n_run_device <= RUN_DEVICE_BUDGET, (
+        f"{compact!r} cycle compiled _run_device {n_run_device}x "
+        f"(budget {RUN_DEVICE_BUDGET}: cold-init + warm-init variants) — "
+        "a static config leaked into the traced signature")
+    # the identical repeat cycle must be compile-FREE: _run_device's jit
+    # cache is module-global, so a fresh engine on the same-shaped scenario
+    # reuses every program (and every eager op is already warm)
+    compile_log.reset()
+    second = _cycle(compact)
+    assert compile_log.events == [], (
+        f"repeat {compact!r} cycle recompiled {compile_log.events} — the "
+        "module-global jit cache missed on identical shapes/statics")
+    np.testing.assert_array_equal(first, second)
+
+
+def test_sharded_runner_cache_hits_and_bypass_is_caught(compile_log,
+                                                        monkeypatch):
+    """The PR-6 contract: repeat same-shape sharded solves reuse the
+    ``_SHARDED_CACHE`` program (zero compiles); wiping the cache forces
+    jit(shard_map(...)) to rebuild, and the sentinel SEES it."""
+    first = _cycle("bucketed", shards=1)     # may compile (cold)
+    compile_log.reset()
+    second = _cycle("bucketed", shards=1)
+    assert compile_log.events == [], (
+        f"repeat sharded cycle recompiled {compile_log.events} — "
+        "_SHARDED_CACHE missed on an identical (mesh, shapes, statics) key")
+    np.testing.assert_array_equal(first, second)
+
+    monkeypatch.setattr(assoc_fast, "_SHARDED_CACHE", {})
+    compile_log.reset()
+    third = _cycle("bucketed", shards=1)
+    assert len(compile_log.events) > 0, (
+        "bypassing _SHARDED_CACHE produced no compile events — the "
+        "recompilation sentinel lost its signal")
+    np.testing.assert_array_equal(first, third)
