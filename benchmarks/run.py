@@ -33,7 +33,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: cost,convergence,training,"
                          "local_iters,kernels,roofline,assoc_scale,"
-                         "live_hfel")
+                         "live_hfel,admission")
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--quick", action="store_true",
                     help="smoke mode: shrink the assoc_scale stress points "
@@ -76,6 +76,9 @@ def main() -> None:
             fromlist=["run"]).run(report, quick=args.quick),
         "live_hfel": lambda: __import__(
             "benchmarks.live_hfel",
+            fromlist=["run"]).run(report, quick=args.quick),
+        "admission": lambda: __import__(
+            "benchmarks.admission",
             fromlist=["run"]).run(report, quick=args.quick),
     }
     chosen = (args.only.split(",") if args.only else list(sections))

@@ -32,10 +32,12 @@ import sys
 # churn (incremental re-convergence) regime, by the live co-simulation
 # section (elastic re-association during training — anchored to its section
 # prefix so unrelated keys merely containing "live" are still flagged), and
-# by the sharded-sweep + golden-section kernel scaling points.
+# by the sharded-sweep + golden-section kernel scaling points, and by the
+# capacitated streaming-admission section (bulk + per-arrival placement
+# rates at the N=20k stress geometry).
 # Matched by substring against "section/key" names.
 EXPECTED_NEW_SUBSTRINGS = ("bucketed", "churn", "live_hfel/", "golden",
-                           "sharded")
+                           "sharded", "admission")
 
 
 def load_timings(path: str) -> tuple[dict[str, float],

@@ -12,7 +12,9 @@ from repro.core.resource_allocation import (RASolution, beta_of_f, solve,
                                             solve_exact, solve_fixed_point,
                                             solve_paper, solve_reference)
 from repro.core.edge_association import (AssociationEngine, AssociationResult,
-                                         GroupSolver, evaluate_scheme,
+                                         GroupSolver, NoFeasibleServerError,
+                                         evaluate_scheme, greedy_admission,
+                                         nearest_feasible, parked_slots,
                                          solve_group)
 from repro.core.assoc_fast import (FastAssociationEngine,
                                    assignment_true_cost, repair_assignment)
@@ -29,8 +31,9 @@ __all__ = [
     "RASolution", "beta_of_f", "solve", "solve_exact", "solve_fixed_point",
     "solve_paper", "solve_reference",
     "AssociationEngine", "AssociationResult", "FastAssociationEngine",
-    "GroupSolver", "assignment_true_cost", "evaluate_scheme",
-    "repair_assignment", "solve_group",
+    "GroupSolver", "NoFeasibleServerError", "assignment_true_cost",
+    "evaluate_scheme", "greedy_admission", "nearest_feasible",
+    "parked_slots", "repair_assignment", "solve_group",
     "SyncLevel", "SyncSchedule", "cloud_aggregate", "edge_aggregate",
     "hierarchical_sync", "psum_mean",
     "Int8Compressor", "TopKCompressor",

@@ -139,7 +139,10 @@ from jax.sharding import PartitionSpec as P
 from repro.core import resource_allocation as ra
 from repro.core.cost_model import cloud_delay, cloud_energy, global_cost
 from repro.core.edge_association import (AssociationResult, GroupSolver,
-                                         initial_assignment, solve_group)
+                                         NoFeasibleServerError,
+                                         greedy_admission, initial_assignment,
+                                         nearest_feasible, parked_slots,
+                                         solve_group)
 from repro.core.scenario import (ReachBuckets, ReachIndex, Scenario,
                                  ScenarioDelta, reach_index_map,
                                  update_reach_buckets, update_reach_index)
@@ -213,8 +216,8 @@ def _bucket_costs_fn(kind, profile, bucket, cloud_const, ra_backend):
          static_argnames=("kind", "profile", "permission", "min_residual",
                           "max_moves", "exchange_samples", "ra_backend"))
 def _run_device(member, assignment, key, buckets, ex_bucket, slot_of,
-                bucket_of, row_of, cloud_const, rel_tol, warm=None, *, kind,
-                profile, permission, min_residual, max_moves,
+                bucket_of, row_of, cloud_const, cap, rel_tol, warm=None, *,
+                kind, profile, permission, min_residual, max_moves,
                 exchange_samples, ra_backend="xla"):
     """The whole adjustment loop as one device program — the single
     move-selection kernel behind every sweep space (dense / flat compact /
@@ -228,6 +231,13 @@ def _run_device(member, assignment, key, buckets, ex_bucket, slot_of,
     sampled exchange pairs hit arbitrary server pairs, so evaluating them in
     one shared slot space avoids solving every pair once per width bucket.
 
+    ``cap`` is the traced (K,) int32 per-edge admission capacity: a server
+    at cap rejects inbound transfers (exchanges are 1-for-1, hence
+    cap-neutral and never gated). The uncapacitated engine passes a cap of
+    N everywhere — an inbound transfer needs a donor group elsewhere, so
+    ``gsize < N`` always holds and the gate selects exactly the historical
+    moves. Traced, not static: toggling caps never recompiles.
+
     ``warm`` is ``None`` (cold start: every cache row is solved at init) or
     ``(cur_prev (K,), toggles_prev per bucket, stale (K,) bool)`` — the
     incremental-rerun path: rows of non-stale servers are copied from the
@@ -239,17 +249,17 @@ def _run_device(member, assignment, key, buckets, ex_bucket, slot_of,
     with NaN past ``n_moves``.
     """
     return _run_device_impl(member, assignment, key, buckets, ex_bucket,
-                            slot_of, bucket_of, row_of, cloud_const, rel_tol,
-                            warm, axis=None, kind=kind, profile=profile,
-                            permission=permission, min_residual=min_residual,
-                            max_moves=max_moves,
+                            slot_of, bucket_of, row_of, cloud_const, cap,
+                            rel_tol, warm, axis=None, kind=kind,
+                            profile=profile, permission=permission,
+                            min_residual=min_residual, max_moves=max_moves,
                             exchange_samples=exchange_samples,
                             ra_backend=ra_backend)
 
 
 def _run_device_impl(member, assignment, key, buckets, ex_bucket, slot_of,
-                     bucket_of, row_of, cloud_const, rel_tol, warm, *, axis,
-                     kind, profile, permission, min_residual, max_moves,
+                     bucket_of, row_of, cloud_const, cap, rel_tol, warm, *,
+                     axis, kind, profile, permission, min_residual, max_moves,
                      exchange_samples, ra_backend):
     """Adjustment-loop body shared by the single-device jit
     (:func:`_run_device`, ``axis=None`` — traced graph identical to the
@@ -406,8 +416,13 @@ def _run_device_impl(member, assignment, key, buckets, ex_bucket, slot_of,
             src = assign[dev]                                  # (kb, rb)
             delta = minus_delta[dev] + toggles[b] - cur_b
             scale = jnp.maximum(cur_b + cur_src[dev], 1e-9)
+            # capacity feasibility rides the same per-row mask as the
+            # residual-group rule: a destination at cap admits no inbound
+            # transfer (sentinel-padded rows are already ok=False, and the
+            # clamped cap gather there is harmless)
+            headroom = (gsize[bd.servers] < cap[bd.servers])[:, None]
             valid = (bd.ok & (src != bd.servers[:, None])
-                     & (gsize[src] > min_residual))
+                     & (gsize[src] > min_residual) & headroom)
             permitted = valid & (delta < -rel_tol * scale)
             if permission == "pareto":
                 permitted &= harmless(toggles[b], cur_b) & src_harmless[dev]
@@ -556,7 +571,9 @@ def _sharded_runner(mesh, n_buckets: int, has_warm: bool, *, kind, profile,
                        ra_backend=ra_backend)
         shd, rep = P(_SHARD_AXIS), P()
         warm_spec = (rep, shd, rep) if has_warm else rep
-        in_specs = (rep, rep, rep, shd, rep, rep, shd, shd, rep, rep,
+        # (member, assignment, key, buckets, ex_bucket, slot_of, bucket_of,
+        #  row_of, cloud_const, cap, rel_tol, warm)
+        in_specs = (rep, rep, rep, shd, rep, rep, shd, shd, rep, rep, rep,
                     warm_spec)
         out_specs = (rep, rep, rep, shd, rep, rep)
         fn = jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
@@ -650,30 +667,51 @@ def repair_assignment(sc_new: Scenario, prev_assign: np.ndarray,
     apply at every swap point).
 
     Rules: departures (active -> inactive) park at their nearest raw-reachable
-    server; active devices whose previous server is no longer effectively
-    reachable (arrivals holding a parked slot included, when that slot went
-    out of reach) move to their nearest effectively-reachable server;
-    everyone else keeps their slot.
+    server (:func:`~repro.core.edge_association.parked_slots`); active
+    devices whose previous server is no longer effectively reachable
+    (arrivals holding a parked slot included, when that slot went out of
+    reach) move to their nearest effectively-reachable server; everyone else
+    keeps their slot. A displaced device with ZERO effectively-reachable
+    servers raises :class:`~repro.core.edge_association.NoFeasibleServerError`
+    — the old masked ``argmin`` silently parked it on server 0, poisoning
+    server 0's group (and the warm/cold parity that hangs off it).
+
+    Under ``sc_new.capacity``, keepers keep their slots (cap-feasible by
+    induction: the previous stable point respected caps and the churn left
+    them reachable) while displaced devices AND all arrivals are re-admitted
+    greedily in device order via
+    :func:`~repro.core.edge_association.greedy_admission` — an arrival's
+    parked slot was never counted against a cap, so keeping it blindly
+    could overflow the server. Admission failure raises the same error.
 
     Returns ``(assignment, departed, arrived, displaced)`` — the masks the
     caller needs for cache invalidation and trainer-state repair.
     """
     prev_assign = np.asarray(prev_assign)
     n = sc_new.n_devices
-    raw = np.asarray(sc_new.avail)
     dist = np.asarray(sc_new.dist)
     eff = np.asarray(sc_new.eff_avail)
     active = sc_new.active_mask
     old_active = np.asarray(old_active, dtype=bool)
-    parked = np.argmin(np.where(raw, dist, np.inf), axis=0)
-    eff_nearest = np.argmin(np.where(eff, dist, np.inf), axis=0)
+    cap = sc_new.capacity
     departed = old_active & ~active
     arrived = active & ~old_active
     ok_now = eff[prev_assign, np.arange(n)]
     displaced = active & ~ok_now
     assign = prev_assign.copy()
-    assign[departed] = parked[departed]
-    assign[displaced] = eff_nearest[displaced]
+    assign[departed] = parked_slots(sc_new)[departed]
+    if cap is None:
+        assign[displaced] = nearest_feasible(dist, eff,
+                                             need=displaced)[displaced]
+        return assign, departed, arrived, displaced
+    readmit = displaced | arrived
+    keep = active & ~readmit
+    load = np.bincount(assign[keep], minlength=sc_new.n_servers)
+    todo = np.flatnonzero(readmit)
+    placed = greedy_admission(dist, eff, load, cap, todo)
+    if (placed < 0).any():
+        raise NoFeasibleServerError(todo[placed < 0], "no admitting server")
+    assign[todo] = placed
     return assign, departed, arrived, displaced
 
 
@@ -747,6 +785,15 @@ class FastAssociationEngine:
         self.rng = np.random.default_rng(seed)
         self._active = sc.active_mask
         self.avail = np.asarray(sc.eff_avail)
+        # per-edge admission caps (None = the paper's uncapacitated model).
+        # The kernel always takes a traced (K,) cap array; uncapped engines
+        # pass N — never binding, since an inbound transfer needs a donor
+        # group elsewhere — so toggling caps changes no jit signature and
+        # the uncapped graph stays bit-identical to the historical one.
+        self.cap = sc.capacity
+        self._cap = jnp.asarray(
+            np.full(sc.n_servers, sc.n_devices, np.int64)
+            if self.cap is None else self.cap, jnp.int32)
         self.cloud_const = jnp.asarray(
             np.asarray(sc.lp.lambda_e * cloud_energy(sc.srv)
                        + sc.lp.lambda_t * cloud_delay(sc.srv),
@@ -1004,6 +1051,15 @@ class FastAssociationEngine:
         if sc_new.n_devices != n or sc_new.n_servers != k:
             raise ValueError("rerun_incremental requires fixed (N, K); "
                              "churn uses the active mask, not resizing")
+        new_cap = sc_new.capacity
+        if ((self.cap is None) != (new_cap is None)
+                or (self.cap is not None
+                    and not np.array_equal(self.cap, new_cap))):
+            # the traced cap array is engine state built at __init__; the
+            # churn contract (diff_scenarios) keeps caps invariant anyway
+            raise ValueError(
+                "rerun_incremental requires churn-invariant max_devices; "
+                "rebuild the engine to change capacities")
 
         # ---- swap the scenario and patch the static index maps ----
         self.sc = sc_new
@@ -1123,9 +1179,21 @@ class FastAssociationEngine:
                     "compact sweep requires every device assigned within "
                     f"reach; devices {bad.tolist()} are not (e.g. device "
                     f"{bad[0]} -> server {assignment[bad[0]]})")
+        if self.cap is not None:
+            # transfers are cap-gated and exchanges cap-neutral, so a sweep
+            # preserves feasibility — but only if it STARTS feasible; an
+            # over-cap explicit assignment would stay over-cap forever
+            load = np.bincount(assignment[self._active], minlength=k)
+            over = np.flatnonzero(load > self.cap)
+            if over.size:
+                raise ValueError(
+                    f"assignment exceeds max_devices at server(s) "
+                    f"{over.tolist()[:8]} (load "
+                    f"{load[over].tolist()[:8]} > cap "
+                    f"{self.cap[over].tolist()[:8]})")
         args = (jnp.asarray(member0), jnp.asarray(assignment, jnp.int32), key,
                 self._buckets, self._ex_bucket, self._slot_of,
-                self._bucket_of, self._row_of, self.cloud_const,
+                self._bucket_of, self._row_of, self.cloud_const, self._cap,
                 jnp.float32(rel_tol), warm)
         if self._mesh is None:
             member, assign, cur, toggles, moves, trace = _run_device(

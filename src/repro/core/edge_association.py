@@ -199,6 +199,87 @@ class GroupSolver:
 
 
 # ---------------------------------------------------------------------------
+# Guarded feasibility helpers (shared by host + device engines + live loop)
+# ---------------------------------------------------------------------------
+
+class NoFeasibleServerError(RuntimeError):
+    """Raised when a device has no reachable (and, under capacities, no
+    admitting) server — the replacement for the old silent all-``inf``
+    ``argmin``, which parked such devices on server 0 with no signal.
+
+    ``devices`` lists the offending device indices so callers (e.g. the
+    live admission loop) can demote or queue them instead of crashing.
+    """
+
+    def __init__(self, devices, reason: str = "no feasible server"):
+        self.devices = np.atleast_1d(np.asarray(devices, dtype=np.int64))
+        super().__init__(f"{reason} for device(s) {self.devices.tolist()}")
+
+
+def nearest_feasible(dist: np.ndarray, feasible: np.ndarray, *,
+                     need: np.ndarray | None = None) -> np.ndarray:
+    """Nearest feasible server per device, with the zero-feasible case made
+    EXPLICIT instead of numpy's silent ``argmin(all-inf column) == 0``.
+
+    ``dist``/``feasible`` are (K, N); returns (N,) int64. Devices outside
+    the ``need`` mask (default: all devices need a slot) are exempt from
+    the check — callers overwrite those slots — while a needed device with
+    an empty feasible column raises :class:`NoFeasibleServerError`.
+    """
+    feasible = np.asarray(feasible, dtype=bool)
+    any_ok = feasible.any(axis=0)
+    satisfied = any_ok if need is None else any_ok | ~np.asarray(need, bool)
+    if not satisfied.all():
+        raise NoFeasibleServerError(np.flatnonzero(~satisfied))
+    return np.argmin(np.where(feasible, np.asarray(dist), np.inf), axis=0)
+
+
+def parked_slots(sc: Scenario) -> np.ndarray:
+    """Deterministic bookkeeping slot per device: nearest raw-reachable
+    server, falling back EXPLICITLY to the globally nearest server on a
+    zero-raw-reach column (possible only on hand-built scenarios — the
+    generators repair raw reach for every device). Parked slots carry no
+    cost and belong to no group; they only keep assignment arrays
+    fixed-size, so reach there is a nicety, not a constraint.
+    """
+    dist = np.asarray(sc.dist)
+    raw = np.asarray(sc.avail, dtype=bool)
+    slots = np.argmin(np.where(raw, dist, np.inf), axis=0)
+    orphan = ~raw.any(axis=0)
+    if orphan.any():
+        slots[orphan] = np.argmin(dist[:, orphan], axis=0)
+    return slots
+
+
+def greedy_admission(dist: np.ndarray, feasible: np.ndarray,
+                     load: np.ndarray, cap: np.ndarray,
+                     devices: np.ndarray) -> np.ndarray:
+    """Sequential nearest-feasible placement under per-edge caps.
+
+    Walks ``devices`` in the given order; each takes the nearest server
+    among ``feasible[:, d] & (load < cap)`` and bumps that server's
+    ``load`` (mutated in place). Returns placements aligned with
+    ``devices``, ``-1`` marking devices NO server could admit — the caller
+    decides whether that is an error (solver init/repair) or an
+    overflow-queue entry (the live admission loop). O(K) vectorized per
+    device with no solver involvement: this IS the streaming admission
+    primitive.
+    """
+    dist = np.asarray(dist)
+    feasible = np.asarray(feasible, dtype=bool)
+    devices = np.asarray(devices, dtype=np.int64)
+    out = np.full(devices.shape[0], -1, dtype=np.int64)
+    for r, d in enumerate(devices):
+        cand = feasible[:, d] & (load < cap)
+        if not cand.any():
+            continue
+        j = int(np.argmin(np.where(cand, dist[:, d], np.inf)))
+        out[r] = j
+        load[j] += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Association state and result
 # ---------------------------------------------------------------------------
 
@@ -209,22 +290,44 @@ def initial_assignment(sc: Scenario, avail: np.ndarray, rng,
 
     On churn scenarios (``sc.active`` set) only active devices draw a real
     placement from ``avail`` (normally the *effective* availability);
-    inactive devices get a deterministic parked slot — nearest raw-reachable
-    server — that exists purely so the assignment array stays fixed-size
-    (they belong to no group and cost nothing).
+    inactive devices get a deterministic parked slot (:func:`parked_slots`)
+    that exists purely so the assignment array stays fixed-size (they
+    belong to no group and cost nothing). An active device with an empty
+    ``avail`` column raises :class:`NoFeasibleServerError` instead of the
+    old silent server-0 fallback. With ``sc.capacity`` set, 'nearest'
+    becomes greedy sequential admission in device order and 'random' draws
+    restrict to servers with headroom at the device's turn (draw-for-draw
+    identical to the uncapacitated path whenever caps never bind).
     """
     active = sc.active_mask
+    cap = sc.capacity
+    avail = np.asarray(avail, dtype=bool)
     out = np.empty(sc.n_devices, dtype=np.int64)
-    if not active.all():
-        raw = np.where(np.asarray(sc.avail), np.asarray(sc.dist), np.inf)
-        out[~active] = np.argmin(raw, axis=0)[~active]
+    out[~active] = parked_slots(sc)[~active]
+    act = np.flatnonzero(active)
     if init == "nearest":
-        dist = np.where(avail, np.asarray(sc.dist), np.inf)
-        out[active] = np.argmin(dist, axis=0)[active]
+        if cap is None:
+            out[active] = nearest_feasible(sc.dist, avail,
+                                           need=active)[active]
+            return out
+        load = np.zeros(sc.n_servers, dtype=np.int64)
+        placed = greedy_admission(sc.dist, avail, load, cap, act)
+        if (placed < 0).any():
+            raise NoFeasibleServerError(act[placed < 0],
+                                        "no admitting server")
+        out[act] = placed
         return out
     if init == "random":
-        for d in np.flatnonzero(active):
-            out[d] = rng.choice(np.flatnonzero(avail[:, d]))
+        load = np.zeros(sc.n_servers, dtype=np.int64)
+        for d in act:
+            ok = avail[:, d] if cap is None else avail[:, d] & (load < cap)
+            choices = np.flatnonzero(ok)
+            if choices.size == 0:
+                raise NoFeasibleServerError(
+                    [d], "no feasible server" if cap is None
+                    else "no admitting server")
+            out[d] = rng.choice(choices)
+            load[out[d]] += 1
         return out
     raise ValueError(init)
 
@@ -262,6 +365,9 @@ class AssociationEngine:
         # candidates (and _groups_of keeps them out of every group)
         self.avail = np.asarray(sc.eff_avail)                 # (K, N)
         self._active = sc.active_mask
+        # per-edge admission caps: a server at cap rejects inbound transfers
+        # (exchanges are 1-for-1, hence cap-neutral and never gated)
+        self.cap = sc.capacity
         self.cloud_const = np.asarray(
             sc.lp.lambda_e * cloud_energy(sc.srv)
             + sc.lp.lambda_t * cloud_delay(sc.srv), dtype=np.float64)
@@ -297,6 +403,17 @@ class AssociationEngine:
     def initial_assignment(self, init: str = "nearest") -> np.ndarray:
         return initial_assignment(self.sc, self.avail, self.rng, init)
 
+    def _check_caps(self, groups) -> None:
+        """Explicit assignments must enter the descent cap-feasible; the
+        move rules then keep them so (transfers are gated, exchanges are
+        cap-neutral)."""
+        if self.cap is None:
+            return
+        over = [i for i, g in enumerate(groups) if len(g) > self.cap[i]]
+        if over:
+            raise ValueError(
+                f"assignment exceeds max_devices at server(s) {over}")
+
     # -- permission test -----------------------------------------------------
 
     def _permitted(self, old_costs: list[float], new_costs: list[float]) -> bool:
@@ -316,6 +433,7 @@ class AssociationEngine:
         assignment = (self.initial_assignment(init) if assignment is None
                       else np.asarray(assignment).copy())
         groups = self._groups_of(assignment)
+        self._check_caps(groups)
         n, k = self.sc.n_devices, self.sc.n_servers
         n_adj = 0
         trace = [self._total(groups)]
@@ -328,7 +446,9 @@ class AssociationEngine:
                 if len(groups[src]) <= self.min_residual:
                     continue
                 targets = [j for j in range(k)
-                           if j != src and self.avail[j, dev]]
+                           if j != src and self.avail[j, dev]
+                           and (self.cap is None
+                                or len(groups[j]) < self.cap[j])]
                 if not targets:
                     continue
                 src_after = groups[src] - {dev}
@@ -395,6 +515,7 @@ class AssociationEngine:
         assignment = (self.initial_assignment(init) if assignment is None
                       else np.asarray(assignment).copy())
         groups = self._groups_of(assignment)
+        self._check_caps(groups)
         n, k = self.sc.n_devices, self.sc.n_servers
         n_adj = 0
         trace = [self._total(groups)]
@@ -410,6 +531,9 @@ class AssociationEngine:
                     continue
                 for dst in range(k):
                     if dst == src or not self.avail[dst, dev]:
+                        continue
+                    if (self.cap is not None
+                            and len(groups[dst]) >= self.cap[dst]):
                         continue
                     cands.append((dev, src, dst))
                     pairs += [(src, groups[src]), (src, groups[src] - {dev}),

@@ -184,6 +184,13 @@ class Scenario:
     dev_xy: np.ndarray | None = None     # (N, 2) meters
     srv_xy: np.ndarray | None = None     # (K, 2) meters
     reach_m: float | None = None
+    # Per-edge admission capacity: server i can hold at most ``max_devices[i]``
+    # active members (production edges have hard compute/memory/uplink caps;
+    # the paper's eq. 17 model lets any reachable edge absorb everyone).
+    # ``None`` = unlimited, the paper-faithful default. Capacities are
+    # churn-invariant: perturb_scenario carries them unchanged and
+    # diff_scenarios rejects scenarios whose caps differ.
+    max_devices: np.ndarray | None = None  # (K,) int, None == no caps
 
     @property
     def n_devices(self) -> int:
@@ -207,6 +214,22 @@ class Scenario:
         if self.active is None:
             return np.asarray(self.avail, dtype=bool)
         return np.asarray(self.avail, dtype=bool) & self.active_mask[None, :]
+
+    @property
+    def capacity(self) -> np.ndarray | None:
+        """Validated (K,) int64 per-edge capacity, or ``None`` when the
+        scenario is uncapacitated. The single normalization point every
+        capacity consumer (engines, repair, admission) reads."""
+        if self.max_devices is None:
+            return None
+        cap = np.asarray(self.max_devices, dtype=np.int64)
+        if cap.shape != (self.n_servers,):
+            raise ValueError(
+                f"max_devices must have shape ({self.n_servers},), "
+                f"got {cap.shape}")
+        if (cap < 1).any():
+            raise ValueError("max_devices entries must be >= 1")
+        return cap
 
 
 # ---------------------------------------------------------------------------
@@ -258,9 +281,13 @@ def perturb_scenario(sc: Scenario, *, seed: int, drift_m: float = 50.0,
     the delta.
 
     Fractions are of the eligible population (active for departures/moves/
-    flips, inactive for arrivals). Every active device is guaranteed at
-    least its nearest server after the step (constraint 17e repair), so
-    ``reach_index_map(new.avail, active=new.active)`` always succeeds.
+    flips, inactive for arrivals). EVERY device — active or parked — is
+    guaranteed at least its nearest server after the step (constraint 17e
+    repair), so ``reach_index_map(new.avail, active=new.active)`` always
+    succeeds AND the parked-slot rules (``nearest raw-reachable server``)
+    stay well defined for inactive devices. This is the reach invariant the
+    generators promise and the property tests pin: drift and reach flips can
+    empty a device's row mid-step, but never in the returned scenario.
     Returns ``(new_scenario, delta)``; ``sc`` itself is not mutated.
     """
     if sc.dev_xy is None or sc.srv_xy is None or sc.reach_m is None:
@@ -302,8 +329,12 @@ def perturb_scenario(sc: Scenario, *, seed: int, drift_m: float = 50.0,
         rows = rng.integers(0, k, cols.size)
         avail[rows, cols] = ~avail[rows, cols]
 
+    # 17e repair over ALL devices: flips/moves only ever touch active
+    # columns, but repairing inactive columns too keeps the all-device
+    # reach invariant robust on hand-built scenarios (parked slots read
+    # raw reach, so a zero row there would poison the repair paths)
     nearest = np.argmin(dist, axis=0)
-    bad = active_new & ~avail.any(axis=0)
+    bad = ~avail.any(axis=0)
     avail[nearest[bad], bad] = True
 
     avail_flips, eff_flips, stale = _delta_flips(
@@ -367,15 +398,21 @@ def diff_scenarios(sc_old: Scenario, sc_new: Scenario) -> ScenarioDelta:
     if (sc_old.n_devices != sc_new.n_devices
             or sc_old.n_servers != sc_new.n_servers):
         raise ValueError("diff_scenarios requires same-shaped scenarios")
+    caps_match = ((sc_old.max_devices is None) == (sc_new.max_devices is None)
+                  and (sc_old.max_devices is None
+                       or np.array_equal(np.asarray(sc_old.max_devices),
+                                         np.asarray(sc_new.max_devices))))
     if not (_same_params(sc_old.dev, sc_new.dev)
             and _same_params(sc_old.srv, sc_new.srv)
-            and sc_old.lp == sc_new.lp):
+            and sc_old.lp == sc_new.lp and caps_match):
         # caches keyed on RA constants survive a delta ONLY because device/
-        # server/learning params are churn-invariant; diffing two unrelated
-        # scenarios would silently poison every incremental consumer
+        # server/learning params (and per-edge caps) are churn-invariant;
+        # diffing two unrelated scenarios would silently poison every
+        # incremental consumer
         raise ValueError(
             "diff_scenarios requires churn-invariant device/server/learning "
-            "parameters (only avail/dist/active/dev_xy may differ)")
+            "parameters and capacities (only avail/dist/active/dev_xy may "
+            "differ)")
     active_old = sc_old.active_mask
     active_new = sc_new.active_mask
     avail_old = np.asarray(sc_old.avail, dtype=bool)
@@ -629,23 +666,27 @@ def channel_gain_from_distance(dist_m: np.ndarray) -> np.ndarray:
 
 def make_scenario(n_devices: int, n_servers: int, *, seed: int = 0,
                   area_m: float = 500.0, reach_m: float = 10_000.0,
+                  cap_slack: float | None = None,
                   lp: LearningParams | None = None) -> Scenario:
     """Sample a random scenario with Table II parameters.
 
     ``reach_m`` bounds which servers a device may associate with (N_i in the
     paper); the default makes every server reachable, matching the paper's
     fully-dense evaluation (availability is then only distance-ranked).
+    ``cap_slack`` (optional) generates per-edge ``max_devices`` caps sized
+    ``ceil(cap_slack * nearest-count)`` — see :func:`_capacities`.
     """
     rng = np.random.default_rng(seed)
     dev_xy = rng.uniform(0.0, area_m, size=(n_devices, 2))
     srv_xy = rng.uniform(0.0, area_m, size=(n_servers, 2))
-    return _assemble(rng, dev_xy, srv_xy, reach_m, lp)
+    return _assemble(rng, dev_xy, srv_xy, reach_m, lp, cap_slack)
 
 
 def make_large_scenario(n_devices: int, n_servers: int, *, seed: int = 0,
                         area_m: float | None = None,
                         reach_m: float | None = None,
                         spread_m: float = 120.0,
+                        cap_slack: float | None = None,
                         lp: LearningParams | None = None) -> Scenario:
     """Cluster-structured scenario for the large regimes the association
     scaling benchmarks exercise — construction is memory-safe up to
@@ -660,6 +701,9 @@ def make_large_scenario(n_devices: int, n_servers: int, *, seed: int = 0,
     regime (every device is still guaranteed its nearest server). At the
     50k+ scales, tighten ``spread_m`` (e.g. 60) so per-server reach counts —
     and with them the sweep's toggle-cache width — stay bounded as N grows.
+    ``cap_slack`` generates binding-by-construction per-edge caps; ``None``
+    (default) keeps the paper's uncapacitated model, bit-identical to
+    previous releases.
     """
     rng = np.random.default_rng(seed)
     area = area_m if area_m is not None else 500.0 * np.sqrt(n_servers / 5.0)
@@ -669,12 +713,30 @@ def make_large_scenario(n_devices: int, n_servers: int, *, seed: int = 0,
     dev_xy = np.clip(srv_xy[anchor]
                      + rng.normal(0.0, spread_m, size=(n_devices, 2)),
                      0.0, area)
-    return _assemble(rng, dev_xy, srv_xy, reach, lp)
+    return _assemble(rng, dev_xy, srv_xy, reach, lp, cap_slack)
+
+
+def _capacities(dist: np.ndarray, cap_slack: float) -> np.ndarray:
+    """Per-edge ``max_devices`` sized from the nearest-server load profile.
+
+    Server ``j`` gets ``max(1, ceil(cap_slack * |{i : nearest(i)=j}|))``
+    slots. ``cap_slack`` slightly above 1.0 leaves headroom over the
+    all-nearest assignment (caps rarely bind); below 1.0 forces spill onto
+    second-choice edges (caps bind by construction). Deterministic in the
+    geometry — consumes NO rng draws, so adding caps to a generator call
+    never shifts the sampled device/server parameters.
+    """
+    if cap_slack <= 0.0:
+        raise ValueError(f"cap_slack must be > 0, got {cap_slack}")
+    nearest_count = np.bincount(np.argmin(dist, axis=0),
+                                minlength=dist.shape[0])
+    return np.maximum(1, np.ceil(cap_slack * nearest_count)).astype(np.int32)
 
 
 def _assemble(rng: np.random.Generator, dev_xy: np.ndarray,
               srv_xy: np.ndarray, reach_m: float,
-              lp: LearningParams | None) -> Scenario:
+              lp: LearningParams | None,
+              cap_slack: float | None = None) -> Scenario:
     """Draw Table II device/server parameters for given node positions."""
     f32 = np.float32
     n_devices = dev_xy.shape[0]
@@ -719,4 +781,6 @@ def _assemble(rng: np.random.Generator, dev_xy: np.ndarray,
     return Scenario(dev=dev, srv=srv, avail=avail, dist=dist,
                     lp=lp or LearningParams(),
                     dev_xy=dev_xy.copy(), srv_xy=srv_xy.copy(),
-                    reach_m=float(reach_m))
+                    reach_m=float(reach_m),
+                    max_devices=(None if cap_slack is None
+                                 else _capacities(dist, cap_slack)))

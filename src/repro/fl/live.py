@@ -61,10 +61,33 @@ re-solves; the runner hands ``rerun_incremental`` the single combined
 :func:`repro.core.scenario.diff_scenarios` delta between the last-swap
 scenario and the current one, so one incremental re-solve absorbs any
 number of ticks.
+
+Streaming admission under capacities
+------------------------------------
+When the scenario carries per-edge caps (``Scenario.max_devices``), the
+runner splits the world in two: the TRUE scenario keeps churning (its
+``active`` mask says who *wants* to train), while the association stack only
+ever sees the admitted *view* (``active`` = the admitted subset). Admission
+is an O(K)-per-device greedy nearest-feasible placement
+(:func:`repro.core.edge_association.greedy_admission`) that runs WITHOUT
+waking the solver: arrivals land in a bounded FIFO overflow queue, an
+admission tick drains it against current loads every round, and re-solve
+rounds drain it again AFTER the global descent (the post-resolve drain) —
+turning ``rerun_incremental`` from a batch-tick API into the periodic
+global pass of an online service loop. A device the capacitated repair
+cannot place (its reachable servers are all at cap) is demoted back to the
+queue instead of crashing the round; when the queue overflows
+``overflow_max``, the oldest entries are dropped and counted as rejected
+(they re-enter only by departing and re-arriving in the true scenario).
+Swap references are stored BEFORE the drain, so the warm/cold parity
+contract above survives capacities: both policies descend from the same
+pre-drain stable state. With no caps, none of this machinery is
+instantiated and the historical behavior is untouched.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 
@@ -73,7 +96,8 @@ import numpy as np
 
 from repro.core.assoc_fast import (FastAssociationEngine,
                                    assignment_true_cost, repair_assignment)
-from repro.core.edge_association import GroupSolver
+from repro.core.edge_association import (GroupSolver, NoFeasibleServerError,
+                                         greedy_admission)
 from repro.core.scenario import (DeviceClientBridge, Scenario,
                                  device_client_bridge, diff_scenarios,
                                  perturb_scenario)
@@ -110,6 +134,10 @@ class LiveHistory:
     n_active: list = field(default_factory=list)
     n_arrived: list = field(default_factory=list)
     n_departed: list = field(default_factory=list)
+    # -- streaming admission (all zero when the scenario has no caps) --
+    n_queued: list = field(default_factory=list)     # queue depth at round end
+    n_admitted: list = field(default_factory=list)   # streamed in this round
+    n_rejected: list = field(default_factory=list)   # dropped from the queue
     # -- swap-indexed --
     swap_rounds: list = field(default_factory=list)
     swap_assignments: list = field(default_factory=list)
@@ -146,6 +174,9 @@ class LiveHistory:
             "n_active": [int(a) for a in self.n_active],
             "n_arrived": [int(a) for a in self.n_arrived],
             "n_departed": [int(d) for d in self.n_departed],
+            "n_queued": [int(q) for q in self.n_queued],
+            "n_admitted": [int(a) for a in self.n_admitted],
+            "n_rejected": [int(x) for x in self.n_rejected],
             "swap_rounds": [int(r) for r in self.swap_rounds],
             "train": self.train.as_dict() if self.train is not None else None,
         }
@@ -169,13 +200,35 @@ class LiveHFELRunner:
                  rel_tol: float = 1e-3, compact: bool | str = "auto",
                  shards: int | None = None, ra_backend: str = "xla",
                  max_moves: int = 10_000, exchange_samples: int = 0,
-                 verify: bool = False,
+                 verify: bool = False, overflow_max: int = 64,
                  bridge: DeviceClientBridge | None = None):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
         if resolve_every < 1:
             raise ValueError("resolve_every must be >= 1")
+        if overflow_max < 0:
+            raise ValueError("overflow_max must be >= 0")
+        # -- streaming admission state (only instantiated under caps): the
+        # TRUE scenario churns; the association stack sees the admitted view
         self.sc = sc
+        self._sc_full = sc
+        self._cap = sc.capacity
+        self.overflow_max = overflow_max
+        self._queue: list[int] = []
+        self._round_rejected = 0
+        self._admitted: np.ndarray | None = None
+        if self._cap is not None:
+            admitted = sc.active_mask.copy()
+            act = np.flatnonzero(admitted)
+            load = np.zeros(sc.n_servers, dtype=np.int64)
+            placed = greedy_admission(sc.dist, sc.eff_avail, load,
+                                      self._cap, act)
+            refused = act[placed < 0]
+            admitted[refused] = False
+            self._admitted = admitted
+            self._queue = refused.tolist()
+            self._round_rejected = self._trim_queue()
+            self.sc = dataclasses.replace(sc, active=admitted.copy())
         self.policy = policy
         self.resolve_every = resolve_every
         self.churn = dict(DEFAULT_CHURN if churn is None else churn)
@@ -211,9 +264,11 @@ class LiveHFELRunner:
                                          profile="default"))
         self.engine: FastAssociationEngine | None = None
         self.assignment: np.ndarray | None = None   # device axis, parked incl.
-        self._active_prev = sc.active_mask.copy()   # matches self.assignment
-        self._sc_at_swap = sc
-        self._active_at_swap = sc.active_mask.copy()
+        # all association-side round state tracks the VIEW (self.sc), which
+        # equals the true scenario whenever there are no caps
+        self._active_prev = self.sc.active_mask.copy()
+        self._sc_at_swap = self.sc
+        self._active_at_swap = self.sc.active_mask.copy()
         self._assign_at_swap: np.ndarray | None = None
         self.history = LiveHistory(policy=policy, resolve_every=resolve_every)
 
@@ -232,8 +287,65 @@ class LiveHFELRunner:
                                      shards=self.shards,
                                      ra_backend=self.ra_backend)
 
+    # -- streaming admission (capacitated scenarios only) --------------------
+
+    def _rebuild_view(self) -> None:
+        self.sc = dataclasses.replace(self._sc_full,
+                                      active=self._admitted.copy())
+
+    def _trim_queue(self) -> int:
+        """Bound the overflow queue: drop the OLDEST entries beyond
+        ``overflow_max`` (they starved longest and their demand is stalest;
+        they re-enter only by departing and re-arriving in the true
+        scenario). Returns the number dropped."""
+        drop = len(self._queue) - self.overflow_max
+        if drop > 0:
+            self._queue = self._queue[drop:]
+        return max(drop, 0)
+
+    def _admission_tick(self) -> int:
+        """Drain the overflow queue greedily against CURRENT loads — the
+        O(K)-per-device streaming admission path; no solver involvement.
+        Admitted devices enter the view and take their placement directly
+        in ``self.assignment``; the rest stay queued in FIFO order."""
+        if not self._queue:
+            return 0
+        k = self._sc_full.n_servers
+        load = np.bincount(self.assignment[self._admitted], minlength=k)
+        devices = np.asarray(self._queue, dtype=np.int64)
+        placed = greedy_admission(self._sc_full.dist, self._sc_full.eff_avail,
+                                  load, self._cap, devices)
+        got = placed >= 0
+        if got.any():
+            self.assignment[devices[got]] = placed[got]
+            self._admitted[devices[got]] = True
+            self._queue = devices[~got].tolist()
+            self._rebuild_view()
+        return int(got.sum())
+
+    def _repair_with_demotions(self, prev_assign: np.ndarray,
+                               old_active: np.ndarray) -> np.ndarray:
+        """Capacitated host repair with overflow demotion: a device
+        :func:`repair_assignment` cannot place (every reachable server at
+        cap) is demoted from the admitted view into the queue and the
+        repair re-runs on the shrunk view. Pre-validating here — BEFORE
+        any engine call — matters because the engine mutates its reach
+        maps before repairing; by the time its internal (deterministic,
+        input-identical) repair runs, this loop has guaranteed it
+        succeeds. Terminates: every retry strictly shrinks the admitted
+        set. Leaves ``self.sc`` as the final view."""
+        while True:
+            self._rebuild_view()
+            try:
+                assign, *_ = repair_assignment(self.sc, prev_assign,
+                                               old_active)
+                return assign
+            except NoFeasibleServerError as e:
+                self._admitted[e.devices] = False
+                self._queue.extend(int(d) for d in e.devices)
+
     def _record(self, *, assoc_s: float, swapped: bool, moves: int,
-                arrived: int, departed: int) -> None:
+                arrived: int, departed: int, admitted: int = 0) -> None:
         h = self.history
         # _eval_solver is None for "proportional" (distance-dependent):
         # assignment_true_cost then builds a fresh per-round solver itself
@@ -249,6 +361,10 @@ class LiveHFELRunner:
         h.n_active.append(int(self.sc.active_mask.sum()))
         h.n_arrived.append(arrived)
         h.n_departed.append(departed)
+        h.n_queued.append(len(self._queue))
+        h.n_admitted.append(admitted)
+        h.n_rejected.append(self._round_rejected)
+        self._round_rejected = 0
         if swapped:
             h.swap_rounds.append(len(h.system_cost) - 1)
             h.swap_assignments.append(self.assignment.copy())
@@ -276,16 +392,36 @@ class LiveHFELRunner:
                 self.engine = None
             return self.bridge.client_assignment(self.assignment)
 
-        self.sc, delta = perturb_scenario(self.sc, seed=self._tick_seed(r),
-                                          **self.churn)
-        active = self.sc.active_mask
-        assoc_s, moves, swapped = 0.0, 0, False
+        capped = self._admitted is not None
+        if capped:
+            admitted_before = self._admitted.copy()
+            self._sc_full, delta = perturb_scenario(
+                self._sc_full, seed=self._tick_seed(r), **self.churn)
+            full_active = self._sc_full.active_mask
+            # true-scenario departures leave the admitted set and the queue;
+            # arrivals join the queue — streaming admission is the ONLY path
+            # into the training population under caps
+            self._admitted &= full_active
+            self._queue = [d for d in self._queue if full_active[d]]
+            self._queue.extend(np.flatnonzero(delta.arrived).tolist())
+            self._rebuild_view()
+        else:
+            self.sc, delta = perturb_scenario(self.sc,
+                                              seed=self._tick_seed(r),
+                                              **self.churn)
+        assoc_s, moves, swapped, admitted_n = 0.0, 0, False, 0
         resolve = self.policy != "static" and r % self.resolve_every == 0
         if resolve and self.policy == "incremental-warm":
             # the delta derivation is part of the warm path's per-swap work,
             # so it belongs inside the association timer (cold's timer
             # likewise spans its repair + engine build)
             t0 = time.perf_counter()
+            if capped:
+                # pre-validate the engine's repair inputs: demote devices
+                # the capacitated repair cannot place, so the engine's own
+                # (deterministic, input-identical) repair cannot raise
+                self._repair_with_demotions(self.engine.stable_assignment,
+                                            self._active_at_swap)
             combined = diff_scenarios(self._sc_at_swap, self.sc)
             self.assignment = self.engine.rerun_incremental(
                 self.sc, combined, max_moves=self.max_moves,
@@ -295,8 +431,12 @@ class LiveHFELRunner:
             moves, swapped = self.engine.last_moves, True
         elif resolve:   # periodic-cold
             t0 = time.perf_counter()
-            assign0, *_ = repair_assignment(self.sc, self._assign_at_swap,
-                                            self._active_at_swap)
+            if capped:
+                assign0 = self._repair_with_demotions(self._assign_at_swap,
+                                                      self._active_at_swap)
+            else:
+                assign0, *_ = repair_assignment(self.sc, self._assign_at_swap,
+                                                self._active_at_swap)
             cold = self._new_engine(self.sc)
             assignment = cold.run(assignment=assign0,
                                   max_moves=self.max_moves,
@@ -308,16 +448,32 @@ class LiveHFELRunner:
         else:
             # static policy, and the off-cycle rounds of the re-association
             # policies: minimal feasibility repair, zero descent moves
-            self.assignment, *_ = repair_assignment(self.sc, self.assignment,
-                                                    self._active_prev)
+            if capped:
+                self.assignment = self._repair_with_demotions(
+                    self.assignment, self._active_prev)
+            else:
+                self.assignment, *_ = repair_assignment(
+                    self.sc, self.assignment, self._active_prev)
         if swapped:
+            # swap refs are stored PRE-drain: the next warm re-solve diffs
+            # against (and the next cold rebuild repairs from) exactly the
+            # state the engines converged on, which is what keeps warm/cold
+            # parity bit-identical under capacities
             self._sc_at_swap = self.sc
-            self._active_at_swap = active.copy()
+            self._active_at_swap = self.sc.active_mask.copy()
             self._assign_at_swap = self.assignment.copy()
+        if capped:
+            # admission tick every round; on swap rounds this is the
+            # post-resolve drain (stable loads just freed by the descent)
+            admitted_n = self._admission_tick()
+            self._round_rejected += self._trim_queue()
+        active = self.sc.active_mask
         self._active_prev = active.copy()
 
         trainer.client_mask = jnp.asarray(self.bridge.client_mask(active))
-        arrivals_c = self.bridge.client_mask(delta.arrived)
+        newly = (self._admitted & ~admitted_before if capped
+                 else delta.arrived)
+        arrivals_c = self.bridge.client_mask(newly)
         if arrivals_c.any():
             trainer.readmit_clients(
                 jnp.asarray(arrivals_c),
@@ -325,7 +481,8 @@ class LiveHFELRunner:
                 self.sc.n_servers)
         self._record(assoc_s=assoc_s, swapped=swapped, moves=moves,
                      arrived=int(delta.arrived.sum()),
-                     departed=int(delta.departed.sum()))
+                     departed=int(delta.departed.sum()),
+                     admitted=admitted_n)
         return self.bridge.client_assignment(self.assignment)
 
 
@@ -338,7 +495,7 @@ def run_live(sc: Scenario, ds: FederatedDataset, *,
              rel_tol: float = 1e-3, compact: bool | str = "auto",
              shards: int | None = None, ra_backend: str = "xla",
              max_moves: int = 10_000, exchange_samples: int = 0,
-             verify: bool = False,
+             verify: bool = False, overflow_max: int = 64,
              bridge: DeviceClientBridge | None = None) -> LiveHistory:
     """Run one live HFEL co-simulation end-to-end; returns its
     :class:`LiveHistory` (training metrics under ``.train``).
@@ -354,6 +511,12 @@ def run_live(sc: Scenario, ds: FederatedDataset, *,
     build (round-0, periodic-cold rebuilds, the warm engine), so the live
     loop can run the PR-6 sharded sweep; the sharded path keeps the
     bit-identical-assignment contract, hence identical histories.
+
+    On a capacitated scenario (``sc.max_devices`` set), arrivals the edges
+    cannot admit wait in a FIFO queue bounded by ``overflow_max`` (see
+    "Streaming admission under capacities" in the module docstring); the
+    per-round queue/admission/rejection counts land in the history's
+    ``n_queued`` / ``n_admitted`` / ``n_rejected``.
     """
     runner = LiveHFELRunner(sc, ds.n_clients, policy=policy,
                             resolve_every=resolve_every, churn=churn,
@@ -362,7 +525,7 @@ def run_live(sc: Scenario, ds: FederatedDataset, *,
                             shards=shards, ra_backend=ra_backend,
                             max_moves=max_moves,
                             exchange_samples=exchange_samples, verify=verify,
-                            bridge=bridge)
+                            overflow_max=overflow_max, bridge=bridge)
     hist = train_federated(ds, method="hfel", n_servers=sc.n_servers,
                            local_iters=local_iters, edge_iters=edge_iters,
                            rounds=rounds, lr=lr, model=model, seed=train_seed,

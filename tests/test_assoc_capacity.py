@@ -1,0 +1,235 @@
+"""Capacity-constrained association: per-edge ``max_devices`` through the
+whole stack — cap generation (`cap_slack`), the fast kernel's headroom gate,
+reference-engine parity under binding caps, capacitated repair in
+``rerun_incremental``, and the guarded zero-feasible errors that replaced
+the silent server-0 fallbacks."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (AssociationEngine, NoFeasibleServerError,
+                        diff_scenarios, greedy_admission, make_large_scenario,
+                        make_scenario, nearest_feasible, parked_slots,
+                        perturb_scenario, repair_assignment)
+from repro.core.assoc_fast import FastAssociationEngine
+from repro.core.edge_association import initial_assignment
+
+CHURN = dict(drift_m=60.0, move_frac=0.2, flip_frac=0.1,
+             depart_frac=0.15, arrive_frac=0.3)
+
+
+def _load(assignment: np.ndarray, active: np.ndarray, k: int) -> np.ndarray:
+    return np.bincount(assignment[active], minlength=k)
+
+
+# ---------------------------------------------------------------------------
+# cap generation
+# ---------------------------------------------------------------------------
+
+def test_cap_slack_none_keeps_capacity_none():
+    assert make_scenario(12, 3, seed=0).capacity is None
+    assert make_large_scenario(12, 3, seed=0).capacity is None
+
+
+def test_cap_generation_deterministic_and_draw_compatible():
+    """Deriving caps consumes no rng draws: every other scenario field is
+    bit-identical with and without ``cap_slack``."""
+    a = make_large_scenario(24, 4, seed=3)
+    b = make_large_scenario(24, 4, seed=3, cap_slack=1.2)
+    c = make_large_scenario(24, 4, seed=3, cap_slack=1.2)
+    np.testing.assert_array_equal(a.dist, b.dist)
+    np.testing.assert_array_equal(a.avail, b.avail)
+    np.testing.assert_array_equal(a.dev_xy, b.dev_xy)
+    assert a.capacity is None
+    np.testing.assert_array_equal(b.capacity, c.capacity)
+    # sized from the nearest-server load profile, never below 1
+    nearest = np.bincount(np.argmin(b.dist, axis=0), minlength=b.n_servers)
+    np.testing.assert_array_equal(
+        b.capacity, np.maximum(1, np.ceil(1.2 * nearest)).astype(np.int64))
+    assert (b.capacity >= 1).all()
+
+
+def test_cap_slack_must_be_positive():
+    with pytest.raises(ValueError, match="cap_slack"):
+        make_scenario(8, 2, seed=0, cap_slack=0.0)
+
+
+def test_perturb_carries_caps_and_diff_rejects_mismatch():
+    sc = make_large_scenario(16, 3, seed=0, cap_slack=1.2)
+    sc2, _ = perturb_scenario(sc, seed=1, **CHURN)
+    np.testing.assert_array_equal(sc2.capacity, sc.capacity)
+    stripped = dataclasses.replace(sc2, max_devices=None)
+    with pytest.raises(ValueError, match="capacit"):
+        diff_scenarios(sc, stripped)
+
+
+# ---------------------------------------------------------------------------
+# guarded helpers
+# ---------------------------------------------------------------------------
+
+def test_nearest_feasible_raises_on_needed_empty_column():
+    dist = np.array([[1.0, 5.0], [2.0, 9.0]])
+    feasible = np.array([[True, False], [True, False]])
+    with pytest.raises(NoFeasibleServerError) as ei:
+        nearest_feasible(dist, feasible)
+    np.testing.assert_array_equal(ei.value.devices, [1])
+    # exempting the dead column via `need` succeeds
+    out = nearest_feasible(dist, feasible, need=np.array([True, False]))
+    assert out[0] == 0
+
+
+def test_greedy_admission_sequential_load_accounting():
+    # one server with cap 1, two devices both nearest to it: the second
+    # must spill to the farther server, the third (unreachable) stays -1
+    # and consumes no load.
+    dist = np.array([[1.0, 2.0, 3.0],
+                     [10.0, 11.0, 12.0]])
+    feasible = np.array([[True, True, False],
+                         [True, True, False]])
+    load = np.zeros(2, dtype=np.int64)
+    cap = np.array([1, 1])
+    placed = greedy_admission(dist, feasible, load, cap,
+                              np.array([0, 1, 2]))
+    np.testing.assert_array_equal(placed, [0, 1, -1])
+    np.testing.assert_array_equal(load, [1, 1])
+    # unplaced device consumed no headroom: re-running just it with a
+    # fresh reachable row succeeds
+    placed2 = greedy_admission(dist, np.ones_like(feasible),
+                               np.zeros(2, np.int64), cap, np.array([2]))
+    np.testing.assert_array_equal(placed2, [0])
+
+
+def test_initial_assignment_raises_instead_of_server0():
+    sc = make_scenario(6, 3, seed=2)
+    avail = sc.avail.copy()
+    avail[:, 4] = False  # device 4 can reach nothing
+    rng = np.random.default_rng(0)
+    with pytest.raises(NoFeasibleServerError) as ei:
+        initial_assignment(sc, avail, rng, "nearest")
+    assert 4 in ei.value.devices
+    with pytest.raises(NoFeasibleServerError):
+        initial_assignment(sc, avail, np.random.default_rng(0), "random")
+
+
+def test_initial_assignment_capacitated_respects_caps():
+    sc = make_large_scenario(20, 4, seed=1, cap_slack=1.0)
+    rng = np.random.default_rng(0)
+    out = initial_assignment(sc, sc.eff_avail, rng, "nearest")
+    act = sc.active_mask
+    assert (_load(out, act, sc.n_servers) <= sc.capacity).all()
+    out_r = initial_assignment(sc, sc.eff_avail,
+                               np.random.default_rng(0), "random")
+    assert (_load(out_r, act, sc.n_servers) <= sc.capacity).all()
+
+
+# ---------------------------------------------------------------------------
+# stable points under binding caps
+# ---------------------------------------------------------------------------
+
+def test_fast_engine_never_exceeds_binding_caps():
+    sc = make_large_scenario(24, 4, seed=0, cap_slack=1.0)
+    res = FastAssociationEngine(sc, kind="fast", seed=0).run(
+        "nearest", exchange_samples=0)
+    load = _load(res.assignment, sc.active_mask, sc.n_servers)
+    assert (load <= sc.capacity).all()
+    # the caps genuinely bind: the uncapacitated engine on the same
+    # geometry concentrates load beyond at least one cap
+    base = dataclasses.replace(sc, max_devices=None)
+    res0 = FastAssociationEngine(base, kind="fast", seed=0).run(
+        "nearest", exchange_samples=0)
+    load0 = _load(res0.assignment, sc.active_mask, sc.n_servers)
+    assert (load0 > sc.capacity).any()
+    # and capping costs something: constrained optimum is no better
+    assert res.total_cost >= res0.total_cost - 1e-9
+
+
+def test_non_binding_caps_bit_identical_to_uncapped():
+    """caps = N never gate a move (an inbound transfer needs a donor group
+    elsewhere), so the capacitated engine must replay the uncapacitated
+    descent bit-for-bit."""
+    sc = make_scenario(18, 4, seed=5)
+    capped = dataclasses.replace(
+        sc, max_devices=np.full(sc.n_servers, sc.n_devices, np.int64))
+    a = FastAssociationEngine(sc, kind="fast", seed=0).run("nearest")
+    b = FastAssociationEngine(capped, kind="fast", seed=0).run("nearest")
+    np.testing.assert_array_equal(a.assignment, b.assignment)
+    assert a.total_cost == b.total_cost
+
+
+@pytest.mark.parametrize("compact", [False, True])
+def test_fast_vs_reference_move_for_move_with_binding_caps(compact):
+    sc = make_large_scenario(20, 4, seed=2, cap_slack=1.0)
+    ref = AssociationEngine(sc, kind="fast", seed=0).run_batched(
+        "nearest", exchange_samples=0)
+    fast = FastAssociationEngine(sc, kind="fast", seed=0,
+                                 compact=compact).run(
+        "nearest", exchange_samples=0)
+    np.testing.assert_array_equal(ref.assignment, fast.assignment)
+    assert abs(ref.total_cost - fast.total_cost) <= 1e-4 * fast.total_cost
+    load = _load(fast.assignment, sc.active_mask, sc.n_servers)
+    assert (load <= sc.capacity).all()
+
+
+def test_reference_engine_run_respects_caps():
+    sc = make_large_scenario(18, 3, seed=4, cap_slack=1.0)
+    res = AssociationEngine(sc, kind="fast", seed=0).run(
+        exchange_samples=0)
+    load = _load(res.assignment, sc.active_mask, sc.n_servers)
+    assert (load <= sc.capacity).all()
+
+
+# ---------------------------------------------------------------------------
+# churn: capacitated repair + warm/cold parity
+# ---------------------------------------------------------------------------
+
+def test_rerun_incremental_warm_cold_parity_with_caps():
+    sc = make_large_scenario(24, 4, seed=0, cap_slack=1.3)
+    eng = FastAssociationEngine(sc, kind="fast", seed=0)
+    eng.run("nearest", exchange_samples=0)
+    cur = sc
+    for step in range(3):
+        nxt, delta = perturb_scenario(cur, seed=10 + step, **CHURN)
+        res = eng.rerun_incremental(nxt, delta, verify=True)
+        load = _load(res.assignment, nxt.active_mask, nxt.n_servers)
+        assert (load <= nxt.capacity).all()
+        cur = nxt
+
+
+def test_rerun_incremental_rejects_changed_caps():
+    sc = make_large_scenario(16, 3, seed=0, cap_slack=1.3)
+    eng = FastAssociationEngine(sc, kind="fast", seed=0)
+    eng.run("nearest", exchange_samples=0)
+    sc2, delta = perturb_scenario(sc, seed=1, **CHURN)
+    sc2 = dataclasses.replace(sc2, max_devices=sc.capacity + 1)
+    with pytest.raises(ValueError, match="max_devices|capacit"):
+        eng.rerun_incremental(sc2, delta)
+
+
+def test_repair_raises_when_last_reachable_server_churns_away():
+    """Regression for the silent server-0 fallback: a displaced device with
+    zero effectively-reachable servers must raise with its index, not park
+    on server 0."""
+    sc = make_scenario(8, 3, seed=1)
+    prev = nearest_feasible(sc.dist, sc.avail)
+    avail = sc.avail.copy()
+    avail[:, 3] = False  # churn device 3's last reachable server away
+    sc2 = dataclasses.replace(sc, avail=avail)
+    with pytest.raises(NoFeasibleServerError) as ei:
+        repair_assignment(sc2, prev, np.ones(8, bool))
+    assert 3 in ei.value.devices
+
+
+def test_capacitated_repair_readmits_arrivals_within_caps():
+    sc = make_large_scenario(20, 4, seed=6, cap_slack=1.3)
+    eng = FastAssociationEngine(sc, kind="fast", seed=0)
+    res = eng.run("nearest", exchange_samples=0)
+    sc2, _ = perturb_scenario(sc, seed=3, **CHURN)
+    assign, departed, arrived, displaced = repair_assignment(
+        sc2, res.assignment, sc.active_mask)
+    load = _load(assign, sc2.active_mask, sc2.n_servers)
+    assert (load <= sc2.capacity).all()
+    # keepers kept their slots
+    keep = sc2.active_mask & sc.active_mask & ~displaced
+    np.testing.assert_array_equal(assign[keep], res.assignment[keep])

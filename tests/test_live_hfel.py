@@ -310,3 +310,94 @@ def test_live_parity_and_cost_larger_config():
     assert cold.cumulative_cost <= static.cumulative_cost * (1 + 1e-9)
     # training survived the churn: accuracy improved over the run
     assert warm.train.test_acc[-1] > warm.train.test_acc[0]
+
+
+# -- streaming admission under capacities ------------------------------------
+
+ADMIT_CHURN = dict(drift_m=60.0, move_frac=0.2, flip_frac=0.1,
+                   depart_frac=0.25, arrive_frac=0.5)
+
+
+class _FakeTrainer:
+    """Just enough trainer surface for begin_round: the mask attribute and
+    the arrival-readmit hook."""
+    client_mask = None
+
+    def __init__(self):
+        self.readmits = []
+
+    def readmit_clients(self, mask, assign, k):
+        self.readmits.append(np.asarray(mask).copy())
+
+
+def _capped(sc, caps):
+    import dataclasses
+    return dataclasses.replace(sc, max_devices=np.asarray(caps, np.int64))
+
+
+def test_admission_queue_fills_then_drains_without_waking_solver(sc):
+    """Arrivals beyond cap land in the overflow queue; the per-round O(K)
+    admission tick drains them as churn (and re-solve rebalancing) frees
+    headroom — and the admitted view NEVER exceeds a cap at any round."""
+    caps = np.array([4, 4, 4])
+    runner = LiveHFELRunner(_capped(sc, caps), N, policy="incremental-warm",
+                            resolve_every=2, churn=ADMIT_CHURN, seed=0)
+    tr = _FakeTrainer()
+    for rd in range(8):
+        runner.begin_round(tr, rd)
+        load = np.bincount(runner.assignment[runner.sc.active_mask],
+                           minlength=K)
+        assert (load <= caps).all(), f"cap exceeded at round {rd}: {load}"
+        # queued devices are exactly the not-yet-admitted ones
+        assert not runner.sc.active_mask[runner._queue].any()
+    h = runner.history
+    # sum(caps)=12 < 16 active: the initial admission must refuse some
+    assert h.n_queued[0] > 0
+    assert h.n_active[0] == N - h.n_queued[0]
+    # the streaming path admitted queued devices as headroom appeared
+    assert sum(h.n_admitted) > 0
+    # readmitted arrivals reached the trainer hook
+    assert len(tr.readmits) == sum(1 for a in h.n_admitted if a > 0)
+    # nothing was dropped: the default overflow bound was never hit
+    assert sum(h.n_rejected) == 0
+
+
+def test_admission_overflow_bound_rejects_oldest(sc):
+    """overflow_max=0 degenerates the queue to immediate rejection — every
+    refused device is counted, none linger."""
+    runner = LiveHFELRunner(_capped(sc, [4, 4, 4]), N, policy="static",
+                            churn=ADMIT_CHURN, seed=0, overflow_max=0)
+    tr = _FakeTrainer()
+    runner.begin_round(tr, 0)
+    runner.begin_round(tr, 1)
+    h = runner.history
+    assert h.n_queued == [0, 0]
+    assert h.n_rejected[0] > 0
+    with pytest.raises(ValueError, match="overflow_max"):
+        LiveHFELRunner(sc, N, overflow_max=-1)
+
+
+def test_uncapped_history_admission_fields_stay_zero(sc, ds):
+    h = _live(sc, ds, "static", rounds=2, resolve_every=1)
+    assert h.n_queued == [0, 0]
+    assert h.n_admitted == [0, 0]
+    assert h.n_rejected == [0, 0]
+    d = h.as_dict()
+    assert d["n_queued"] == [0, 0] and d["n_rejected"] == [0, 0]
+
+
+def test_warm_cold_swap_parity_under_binding_caps(ds):
+    """The PR-4 parity gate extends to capacitated scenarios: warm and cold
+    must agree bit-for-bit at every swap point even while the admission
+    queue churns the view between re-solves."""
+    scc = make_large_scenario(N, K, seed=0, cap_slack=1.0)
+    kw = dict(rounds=4, resolve_every=2, churn=ADMIT_CHURN, seed=0,
+              local_iters=1, edge_iters=1)
+    warm = run_live(scc, ds, policy="incremental-warm", verify=True, **kw)
+    cold = run_live(scc, ds, policy="periodic-cold", **kw)
+    assert warm.swap_rounds == cold.swap_rounds
+    for r, aw, ac in zip(warm.swap_rounds, warm.swap_assignments,
+                         cold.swap_assignments):
+        np.testing.assert_array_equal(aw, ac,
+                                      err_msg=f"diverged at round {r}")
+    np.testing.assert_allclose(warm.system_cost, cold.system_cost, rtol=1e-6)

@@ -34,10 +34,10 @@ CHURN = dict(drift_m=60.0, move_frac=0.1, flip_frac=0.05, depart_frac=0.05)
 RUN_DEVICE_BUDGET = 2
 
 
-def _cycle(compact, shards=None) -> np.ndarray:
+def _cycle(compact, shards=None, cap_slack=None) -> np.ndarray:
     """cold run -> one churn tick -> warm incremental rerun; returns the
     warm stable point. Deterministic: fixed seeds, exchange_samples=0."""
-    sc = make_large_scenario(N, K, seed=0)
+    sc = make_large_scenario(N, K, seed=0, cap_slack=cap_slack)
     eng = FastAssociationEngine(sc, kind="fast", seed=0, profile="coarse",
                                 rel_tol=1e-3, compact=compact, shards=shards)
     eng.run("nearest", max_moves=3, exchange_samples=0, finalize=False)
@@ -65,6 +65,24 @@ def test_cycle_compile_budget_and_global_jit_cache(compile_log, compact):
         f"repeat {compact!r} cycle recompiled {compile_log.events} — the "
         "module-global jit cache missed on identical shapes/statics")
     np.testing.assert_array_equal(first, second)
+
+
+@pytest.mark.parametrize("compact", [False, True, "bucketed"],
+                         ids=["dense", "flat", "bucketed"])
+def test_capacity_mask_adds_no_run_device_compiles(compile_log, compact):
+    """Per-edge ``max_devices`` caps enter ``_run_device`` as a TRACED
+    ``(K,)`` array (uncapped engines pass a never-binding filled array), so
+    flipping capacities on must not grow the traced signature: once the
+    uncapped programs are warm, a capacitated cycle on the same shapes
+    compiles ZERO new ``_run_device`` variants."""
+    _cycle(compact)                      # warm the uncapped programs
+    compile_log.reset()
+    _cycle(compact, cap_slack=1.3)       # binding caps, same shapes/statics
+    n = compile_log.count("_run_device")
+    assert n == 0, (
+        f"capacitated {compact!r} cycle compiled _run_device {n}x on warm "
+        "same-shape caches — the capacity gate leaked a static into the "
+        "traced signature")
 
 
 def test_sharded_runner_cache_hits_and_bypass_is_caught(compile_log,

@@ -6,6 +6,7 @@ rebuild."""
 import numpy as np
 import pytest
 
+from _hypothesis_compat import given, settings, st
 from repro.core import make_scenario, perturb_scenario
 from repro.core.assoc_fast import FastAssociationEngine
 from repro.core.scenario import (reach_index_map, update_reach_buckets,
@@ -56,6 +57,26 @@ def test_active_devices_always_reach_a_server(seed):
         # delta bookkeeping is self-consistent
         assert not (delta.arrived & delta.departed).any()
         assert (delta.stale_servers | ~delta.eff_flips.any(axis=1)).all()
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 100_000), drift=st.floats(0.0, 150.0),
+       flip=st.floats(0.0, 0.5))
+def test_every_device_keeps_raw_reach_after_perturb(seed, drift, flip):
+    """The 17e repair covers EVERY device, not just the active ones: an
+    inactive device whose reach the flips wiped out used to come back with
+    an all-``False`` column, and its later re-arrival silently landed on
+    server 0 via the masked argmin. Now the perturbation itself restores
+    the nearest server, so raw reach is a scenario-wide invariant."""
+    sc = make_scenario(20, 4, seed=3, reach_m=220.0)
+    for step in range(3):
+        sc, _ = perturb_scenario(
+            sc, seed=seed + step, drift_m=drift, move_frac=0.3,
+            flip_frac=flip, depart_frac=0.3, arrive_frac=0.4)
+        assert sc.avail.any(axis=0).all(), (
+            "a device lost its last raw-reachable server after perturb")
+        # active devices additionally keep EFFECTIVE reach (17e proper)
+        assert sc.eff_avail.any(axis=0)[sc.active_mask].all()
 
 
 def test_perturb_holds_device_params_fixed():
