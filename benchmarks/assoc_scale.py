@@ -20,8 +20,9 @@ Sections:
     refresh) vs a cold start on the perturbed scenario, with a hard
     bit-identical parity gate between the warm stable point and a cold
     rebuild from the same repaired assignment;
-  * sharded: the shard_map sweep over the forced host-device mesh — a hard
-    bit-identical parity probe vs the classic single-device path, an
+  * sharded: the shard_map sweep over the forced host-device mesh — hard
+    bit-identical parity probes vs the classic single-device path (with
+    sampled exchanges both off and on), an
     N=20k/K=200 cold wall-clock ratio, and the N=50k/K=500 headline (cold
     convergence to a stable point + one warm churn re-solve), the regime
     the PR's sharded candidate refresh exists for; timing keys carry the
@@ -326,8 +327,10 @@ def _sharded_scale(report, timings, quick):
     """Sharded-sweep scaling: the N=50k regime the single-device engine
     cannot reach in benchmark time.
 
-    * a hard parity probe (sharded vs classic stable point, bit-identical)
-      at a small point — quick mode stops here;
+    * hard parity probes (sharded vs classic stable point, bit-identical)
+      at a small point, both transfer-only and with sampled exchanges on
+      (PR 10's distributed proposal/winner-merge path) — quick mode stops
+      here;
     * N=20k/K=200 smoke: cold sharded convergence plus the single-device
       cold run for the wall-clock ratio;
     * the N=50k/K=500 headline: cold sharded convergence END-TO-END to a
@@ -368,6 +371,25 @@ def _sharded_scale(report, timings, quick):
     timings["sharded_parity_n250_k10"] = dt
     counts["sharded_parity_n250_k10"] = p
     report("assoc_scale/sharded/N250_K10_parity", None, True)
+
+    # PR 10: the same probe with sampled exchanges ON — the replicated pair
+    # proposal + chunk-partitioned pricing + all_gather winner fold must
+    # reproduce the classic exchange sequence bit-for-bit (the path the old
+    # exchange_samples=0 restriction rejected outright)
+    ref_ex = FastAssociationEngine(sc, kind="fast", seed=0, profile="coarse",
+                                   compact="bucketed").run(
+        "nearest", max_moves=6, exchange_samples=64)
+    t0 = time.perf_counter()
+    res_ex = FastAssociationEngine(sc, kind="fast", seed=0, profile="coarse",
+                                   compact="bucketed", shards=p).run(
+        "nearest", max_moves=6, exchange_samples=64)
+    dt = time.perf_counter() - t0
+    assert np.array_equal(ref_ex.assignment, res_ex.assignment), (
+        "sharded sampled-exchange stable point diverged from the classic "
+        "sweep")
+    timings["sharded_exchange_parity_n250_k10"] = dt
+    counts["sharded_exchange_parity_n250_k10"] = p
+    report("assoc_scale/sharded/N250_K10_exchange_parity", None, True)
     if quick:
         return out
 

@@ -22,6 +22,13 @@ the training side only has to be *present* (hot-swaps, masking, arrivals
 all exercised); its accuracy trend is tracked by the paper_training
 benchmarks, not this one.
 
+The full run also lands the PR-10 headline: one sharded N=50k/K=500
+``incremental-warm`` trajectory WITH sampled exchanges (engine sharded over
+the forced host-device mesh, exchange budget at the engine default of 64) —
+the configuration the old ``exchange_samples=0`` sharding restriction made
+illegal. Its timing keys carry the device count in ``device_counts`` so
+``scripts/bench_guard.py`` never compares runs across shard widths.
+
 ``quick=True`` smokes ``run_live`` end-to-end in under a minute: 2 rounds
 at N=40/K=4 with ``verify=True``, so the engine-level warm/cold parity
 assertion runs INSIDE the smoke as well.
@@ -111,10 +118,66 @@ def _run_policies(report, timings, *, n, k, rounds, resolve_every, seed=0):
     return out
 
 
+def _run_sharded_live(report, timings, counts, *, n, k, rounds, seed=0):
+    """The other half of the PR-10 ROADMAP item: a sharded live round at the
+    N=50k/K=500 regime WITH sampled exchanges — the exact configuration the
+    old ``exchange_samples=0`` sharding restriction forbade. One
+    ``incremental-warm`` trajectory (round-0 cold solve + warm churn
+    re-solves), engine sharded over every forced host device, exchange
+    budget at the engine default. Bit-identical sharded-vs-classic parity
+    is gated at small N by the test matrix and the assoc_scale probes;
+    repeating it here would double a multi-minute run for no new signal.
+    The 128-client bridge keeps the training side present but cheap —
+    association cost at N=50k is what this section measures."""
+    import jax
+
+    p = len(jax.devices())
+    tag = f"n{n}_k{k}"
+    out: dict = {"n": n, "k": k, "rounds": rounds, "shards": p,
+                 "exchange_samples": 64}
+    report(f"live_hfel/sharded_{tag.upper()}/devices", None, p)
+    if p < 2:
+        report(f"live_hfel/sharded_{tag.upper()}/SKIPPED", None,
+               "single device — set XLA_FLAGS=--xla_force_host_platform"
+               "_device_count=4")
+        return out
+    sc = make_large_scenario(n, k, seed=seed, spread_m=60.0)
+    ds = make_mnist_like(128, samples_total=2000, seed=seed)
+    t0 = time.perf_counter()
+    h = run_live(sc, ds, policy="incremental-warm", rounds=rounds,
+                 resolve_every=1, churn=dict(drift_m=60.0, move_frac=0.01,
+                                             flip_frac=0.005,
+                                             depart_frac=0.005,
+                                             arrive_frac=0.1),
+                 seed=seed, local_iters=1, edge_iters=1, eval_every=rounds,
+                 profile="coarse", rel_tol=1e-2, compact="bucketed",
+                 shards=p, exchange_samples=64, max_moves=8000)
+    wall = time.perf_counter() - t0
+    timings[f"sharded_live_warm_{tag}"] = wall
+    timings[f"sharded_live_assoc_{tag}"] = h.assoc_seconds_total
+    counts[f"sharded_live_warm_{tag}"] = p
+    counts[f"sharded_live_assoc_{tag}"] = p
+    report(f"live_hfel/sharded_{tag.upper()}/total_s", None, round(wall, 3))
+    report(f"live_hfel/sharded_{tag.upper()}/assoc_s", None,
+           round(h.assoc_seconds_total, 3))
+    report(f"live_hfel/sharded_{tag.upper()}/moves", None,
+           int(np.sum(h.moves)))
+    report(f"live_hfel/sharded_{tag.upper()}/cum_cost", None,
+           round(h.cumulative_cost, 2))
+    out.update(total_s=wall, assoc_s=h.assoc_seconds_total,
+               assoc_seconds=[float(s) for s in h.assoc_seconds],
+               moves=[int(m) for m in h.moves],
+               cumulative_cost=h.cumulative_cost,
+               n_active=[int(a) for a in h.n_active])
+    return out
+
+
 def run(report, quick: bool = False):
     t_start = time.perf_counter()
     timings: dict[str, float] = {}
-    out: dict = {"timings": timings, "quick": quick}
+    device_counts: dict[str, int] = {}
+    out: dict = {"timings": timings, "device_counts": device_counts,
+                 "quick": quick}
 
     if quick:
         # smoke: 2 rounds, warm policy, engine-level verify ON (each warm
@@ -138,6 +201,8 @@ def run(report, quick: bool = False):
     else:
         out["N250_K10"] = _run_policies(report, timings, n=250, k=10,
                                         rounds=8, resolve_every=2)
+        out["sharded_N50000_K500"] = _run_sharded_live(
+            report, timings, device_counts, n=50_000, k=500, rounds=2)
 
     report("live_hfel/runtime_s", None, round(time.perf_counter() - t_start, 3))
     return out

@@ -32,12 +32,15 @@ import sys
 # churn (incremental re-convergence) regime, by the live co-simulation
 # section (elastic re-association during training — anchored to its section
 # prefix so unrelated keys merely containing "live" are still flagged), and
-# by the sharded-sweep + golden-section kernel scaling points, and by the
+# by the sharded-sweep + golden-section kernel scaling points, by the
 # capacitated streaming-admission section (bulk + per-arrival placement
-# rates at the N=20k stress geometry).
+# rates at the N=20k stress geometry), and by the distributed-exchange
+# points (PR 10: sampled exchanges under sharding, plus the N=50k sharded
+# live round — "sharded_live" keys).
 # Matched by substring against "section/key" names.
 EXPECTED_NEW_SUBSTRINGS = ("bucketed", "churn", "live_hfel/", "golden",
-                           "sharded", "admission")
+                           "sharded", "admission", "exchange",
+                           "sharded_live")
 
 
 def load_timings(path: str) -> tuple[dict[str, float],

@@ -19,6 +19,13 @@ HFEL005  float64 inside ``src/repro/kernels`` or jitted scopes — the sweep's
 HFEL006  decorator-jitted functions with >= 4 traced array params and no
          ``donate_argnums`` — large resident buffers double peak memory on
          every sweep step.
+HFEL007  ``jax.random.split`` / ``fold_in`` inside a ``shard_map``-traced
+         scope without an axis-index fold — every shard advances the SAME
+         stream, silently correlating what reads like per-shard randomness.
+         Fold in ``lax.axis_index(axis)`` to diversify, or pragma the line
+         when replication IS the contract (``replicated-key``, e.g. the
+         sharded exchange proposal draws identical pairs on every shard by
+         design).
 
 Jit-scope detection (documented heuristics, tuned to this repo's idioms):
 
@@ -105,6 +112,7 @@ class JitScope:
     static_nums: set[int] = field(default_factory=set)
     bound_positional: int = 0       # leading params consumed by partial()
     donates: bool = False
+    via_shard_map: bool = False     # traced under a named mesh axis
 
     def param_split(self) -> tuple[list[str], set[str]]:
         """(traced positional param names, static param names)."""
@@ -198,6 +206,7 @@ def find_jit_scopes(tree: ast.AST) -> list[JitScope]:
             prev.bound_positional = max(prev.bound_positional,
                                         scope.bound_positional)
             prev.donates = prev.donates or scope.donates
+            prev.via_shard_map = prev.via_shard_map or scope.via_shard_map
 
     # decorator forms
     for fn in defs.values():
@@ -226,7 +235,7 @@ def find_jit_scopes(tree: ast.AST) -> list[JitScope]:
             _jit_kwargs(node, scope)
             add(_resolve(node.args[0], defs, env, scope), scope)
         elif tail == "shard_map" and node.args:
-            scope = JitScope(None, "call")
+            scope = JitScope(None, "call", via_shard_map=True)
             add(_resolve(node.args[0], defs, env, scope), scope)
         elif tail == "pallas_call":
             target = node.args[0] if node.args else next(
@@ -524,6 +533,70 @@ def rule_hfel006(tree: ast.AST, path: str, lines: list[str],
     return out
 
 
+#: dotted prefixes (last component) under which a ``.split`` call means the
+#: jax PRNG, not array splitting (``jnp.split``/``np.split`` must not fire)
+RNG_SPLIT_PREFIXES = {"random", "jrandom", "jr"}
+
+
+def _axis_diversified(expr: ast.expr, diversified: set[str]) -> bool:
+    """True if the expression visibly mixes the mesh position into the key:
+    it contains an ``axis_index`` call, or reads a name already derived from
+    one."""
+    for sub in ast.walk(expr):
+        if isinstance(sub, ast.Call) and \
+                _tail(dotted(sub.func)) == "axis_index":
+            return True
+        if isinstance(sub, ast.Name) and sub.id in diversified:
+            return True
+    return False
+
+
+def rule_hfel007(tree: ast.AST, path: str, lines: list[str],
+                 scopes: list[JitScope]) -> list[Finding]:
+    """Replicated-key hazard under shard_map: ``jax.random.split`` /
+    ``fold_in`` on a key inside a shard_map-traced scope advances the SAME
+    stream on every shard unless the mesh position is folded in — code that
+    reads as per-shard randomness is silently correlated. An
+    ``axis_index``-derived key (directly in the call, or via a name assigned
+    from one) is the diversification idiom and exempt; deliberate
+    replication takes a ``replicated-key`` pragma."""
+    out: list[Finding] = []
+    for scope in scopes:
+        if not scope.via_shard_map:
+            continue
+        # names whose values mix in the axis index (two passes approximate
+        # the fixpoint, matching _scope_taint)
+        diversified: set[str] = set()
+        for _ in range(2):
+            for node in ast.walk(scope.node):
+                if isinstance(node, ast.Assign) and \
+                        _axis_diversified(node.value, diversified):
+                    for t in node.targets:
+                        diversified.update(_target_names(t))
+        for node in ast.walk(scope.node):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted(node.func)
+            tail = _tail(name)
+            if tail == "fold_in":
+                pass        # fold_in is unique to the jax PRNG
+            elif tail == "split" and name != tail and _tail(
+                    name.rsplit(".", 1)[0]) in RNG_SPLIT_PREFIXES:
+                pass
+            else:
+                continue
+            if any(_axis_diversified(a, diversified) for a in node.args):
+                continue    # the key visibly carries the mesh position
+            out.append(_finding(
+                "HFEL007", path, lines, node,
+                f"{tail}() inside shard_map-traced `{scope.node.name}` "
+                "without an axis-index fold — every shard advances the SAME "
+                "stream; fold in lax.axis_index(axis) to diversify, or "
+                "pragma the line if replication is the contract "
+                "(replicated-key)"))
+    return out
+
+
 def run_rules(tree: ast.AST, path: str, lines: list[str]) -> list[Finding]:
     scopes = find_jit_scopes(tree)
     out: list[Finding] = []
@@ -532,4 +605,5 @@ def run_rules(tree: ast.AST, path: str, lines: list[str]) -> list[Finding]:
     out += rule_hfel003_004(tree, path, lines, scopes)
     out += rule_hfel005(tree, path, lines, scopes)
     out += rule_hfel006(tree, path, lines, scopes)
+    out += rule_hfel007(tree, path, lines, scopes)
     return out

@@ -87,10 +87,17 @@ lexicographic (delta, device-major order) fold that reproduces the
 sequential bucket fold's move selection exactly. A sharded sweep therefore
 applies the identical move sequence as the single-device program, and
 ``shards=None`` (the default) does not even trace the collectives — the
-historical bit-exact graph is untouched. Sampled exchanges are not
-distributed (arbitrary server pairs), so sharded engines require
-``exchange_samples=0``. On CPU, multi-device meshes come from
-``XLA_FLAGS=--xla_force_host_platform_device_count=<p>``.
+historical bit-exact graph is untouched. Sampled exchanges distribute too:
+the pair *proposal* stays replicated — every shard splits the same key and
+draws the identical ``(S, 2)`` batch, preserving the ``shards=None`` RNG
+stream bit-for-bit — while the 2S candidate group-cost solves (the
+expensive part) are index-partitioned across shards in contiguous sample
+chunks, and the winning swap is selected by the same ``all_gather`` +
+lexicographic (delta, sample-index order) fold the transfer path uses
+(contiguous chunks make the per-shard argmin reproduce ``argmin``'s
+first-occurrence tie-break globally). The apply step and the two-row cache
+refresh then run exactly like a transfer's. On CPU, multi-device meshes
+come from ``XLA_FLAGS=--xla_force_host_platform_device_count=<p>``.
 
 ``ra_backend="pallas"`` additionally routes every batched group solve of
 the ``fast`` kind through the fused golden-section kernel
@@ -162,6 +169,13 @@ _SHARD_AXIS = "servers"
 # per move than flat; near zero padding the per-bucket dispatch overhead
 # wins nothing, so the threshold sits between the two regimes.
 BUCKETED_AUTO_THRESHOLD = 0.25
+
+#: The engine-wide default sampled-exchange budget (Definition 5 escape
+#: moves per stuck round). ONE default everywhere — ``run``, ``run_tiered``,
+#: ``rerun_incremental``, ``LiveHFELRunner``/``run_live`` — so no driver
+#: silently drops the stochastic-escape path; pass ``exchange_samples=0``
+#: explicitly for a deterministic transfer-only sweep.
+DEFAULT_EXCHANGE_SAMPLES = 64
 
 
 class _Bucket(NamedTuple):
@@ -259,12 +273,13 @@ def _run_device(member, assignment, key, buckets, ex_bucket, slot_of,
 
 def _run_device_impl(member, assignment, key, buckets, ex_bucket, slot_of,
                      bucket_of, row_of, cloud_const, cap, rel_tol, warm, *,
-                     axis, kind, profile, permission, min_residual, max_moves,
-                     exchange_samples, ra_backend):
+                     axis, axis_size=1, kind, profile, permission,
+                     min_residual, max_moves, exchange_samples, ra_backend):
     """Adjustment-loop body shared by the single-device jit
     (:func:`_run_device`, ``axis=None`` — traced graph identical to the
     historical kernel, so single-device results stay bit-exact) and the
-    ``shard_map`` wrapper (:func:`_sharded_runner`, ``axis=_SHARD_AXIS``).
+    ``shard_map`` wrapper (:func:`_sharded_runner`, ``axis=_SHARD_AXIS``,
+    ``axis_size`` = mesh size).
 
     Under sharding every bucket's rows are padded to a multiple of the mesh
     size and partitioned along axis 0; padded rows carry the sentinel server
@@ -279,17 +294,21 @@ def _run_device_impl(member, assignment, key, buckets, ex_bucket, slot_of,
     is 0.0) and an ``all_gather`` + lexicographic (delta, order) fold that
     reproduces the sequential bucket fold's device-major move selection
     exactly, so a sharded sweep applies the identical move sequence.
+
+    Sampled exchanges distribute with the same split (module docstring,
+    "Sharded sweep"): replicated pair proposal, sample-chunk-partitioned
+    candidate pricing, all_gather + (delta, sample index) winner fold.
     """
     k, n = member.shape
     nb = len(buckets)
     i32 = jnp.int32
     idx_n = jnp.arange(n)
+    # contiguous per-shard exchange-sample chunks: shard s prices global
+    # samples [s*ex_chunk, (s+1)*ex_chunk); ceil-division padding samples
+    # carry okay=False so they can never win
+    ex_chunk = -(-exchange_samples // axis_size) if exchange_samples else 0
+    ex_pad = ex_chunk * axis_size - exchange_samples
     if axis is not None:
-        if exchange_samples:
-            raise ValueError(
-                "sharded sweeps require exchange_samples=0: sampled "
-                "exchanges touch arbitrary server pairs and are not "
-                "distributed")
         # this shard's locator slice: (1, K) -> (K,)
         bucket_of = bucket_of.reshape(-1)
         row_of = row_of.reshape(-1)
@@ -470,6 +489,10 @@ def _run_device_impl(member, assignment, key, buckets, ex_bucket, slot_of,
 
         def do_exchange(args):
             member, assign, key = args
+            # the pair PROPOSAL is replicated under sharding: every shard
+            # splits the same key and draws the identical (S, 2) batch, so
+            # the shards=None RNG stream is preserved bit-for-bit
+            # hfellint: disable=HFEL007 -- replicated-key by design
             key, sub = jax.random.split(key)
             pairs = jax.random.randint(sub, (exchange_samples, 2), 0, n,
                                        dtype=i32)
@@ -487,19 +510,50 @@ def _run_device_impl(member, assignment, key, buckets, ex_bucket, slot_of,
                                ex_bucket.idx[rows]]
                         & ex_bucket.exists[rows])
 
-            gi = ex_base(si) ^ onehot(si, dn) ^ onehot(si, dm)
-            gj = ex_base(sj) ^ onehot(sj, dm) ^ onehot(sj, dn)
-            costs = ex_cost_v(jnp.concatenate([si, sj]),
-                              jnp.concatenate([gi, gj]))
-            ci, cj = costs[:exchange_samples], costs[exchange_samples:]
-            old = cur[si] + cur[sj]
-            delta = ci + cj - old
-            perm = okay & (delta < -rel_tol * jnp.maximum(old, 1e-9))
-            if permission == "pareto":
-                perm &= harmless(ci, cur[si]) & harmless(cj, cur[sj])
-            masked = jnp.where(perm, delta, _INF)
-            e = jnp.argmin(masked)
-            applied = jnp.isfinite(masked[e])
+            def price(dn_, dm_, si_, sj_, okay_):
+                """Masked exchange deltas of a (sub)batch of sampled pairs —
+                per-sample arithmetic identical on both paths, so chunked
+                sharded pricing is bitwise the single-device pricing."""
+                m = dn_.shape[0]
+                gi = ex_base(si_) ^ onehot(si_, dn_) ^ onehot(si_, dm_)
+                gj = ex_base(sj_) ^ onehot(sj_, dm_) ^ onehot(sj_, dn_)
+                costs = ex_cost_v(jnp.concatenate([si_, sj_]),
+                                  jnp.concatenate([gi, gj]))
+                ci, cj = costs[:m], costs[m:]
+                old = cur[si_] + cur[sj_]
+                delta = ci + cj - old
+                perm = okay_ & (delta < -rel_tol * jnp.maximum(old, 1e-9))
+                if permission == "pareto":
+                    perm &= harmless(ci, cur[si_]) & harmless(cj, cur[sj_])
+                return jnp.where(perm, delta, _INF)
+
+            if axis is None:
+                masked = price(dn, dm, si, sj, okay)
+                e = jnp.argmin(masked)
+                best = masked[e]
+            else:
+                # this shard prices only its contiguous sample chunk; the
+                # winner merge below is the transfer path's all_gather +
+                # lexicographic (delta, order) fold with order = global
+                # sample index, which reproduces the replicated argmin's
+                # first-occurrence tie-break exactly
+                start = lax.axis_index(axis) * ex_chunk
+
+                def cut(x):
+                    if ex_pad:
+                        pad = jnp.zeros((ex_pad,) + x.shape[1:], x.dtype)
+                        x = jnp.concatenate([x, pad])
+                    return lax.dynamic_slice_in_dim(x, start, ex_chunk)
+
+                masked = price(cut(dn), cut(dm), cut(si), cut(sj), cut(okay))
+                el = jnp.argmin(masked)
+                deltas = lax.all_gather(masked[el], axis)      # (p,)
+                orders = lax.all_gather((start + el).astype(i32), axis)
+                best = jnp.min(deltas)
+                g_tie = jnp.where(deltas == best, orders, _I32_BIG)
+                e = jnp.clip(g_tie[jnp.argmin(g_tie)], 0,
+                             exchange_samples - 1)
+            applied = jnp.isfinite(best)
             ri, rj = si[e], sj[e]
             dnb, dmb = dn[e], dm[e]
             m2 = member.at[ri, dnb].set(
@@ -564,7 +618,8 @@ def _sharded_runner(mesh, n_buckets: int, has_warm: bool, *, kind, profile,
            permission, min_residual, max_moves, exchange_samples, ra_backend)
     fn = _SHARDED_CACHE.get(key)
     if fn is None:
-        body = partial(_run_device_impl, axis=_SHARD_AXIS, kind=kind,
+        body = partial(_run_device_impl, axis=_SHARD_AXIS,
+                       axis_size=int(mesh.devices.size), kind=kind,
                        profile=profile, permission=permission,
                        min_residual=min_residual, max_moves=max_moves,
                        exchange_samples=exchange_samples,
@@ -935,9 +990,16 @@ class FastAssociationEngine:
                                        np.asarray(self.cloud_const), 0.0)))
 
     def run(self, init: str = "nearest", *, max_moves: int = 10_000,
-            exchange_samples: int = 64,
+            exchange_samples: int = DEFAULT_EXCHANGE_SAMPLES,
             assignment: np.ndarray | None = None, finalize: bool = True):
         """One adjustment-loop descent to the stable point.
+
+        ``exchange_samples`` defaults to :data:`DEFAULT_EXCHANGE_SAMPLES`
+        (= 64) — the one engine-wide default, shared with ``run_tiered``,
+        ``rerun_incremental`` and the live loop — and works under
+        ``shards=p`` too (the sampled-exchange pass is distributed with a
+        bit-identical winner merge; see "Sharded sweep" in the module
+        docstring). Pass 0 for a deterministic transfer-only sweep.
 
         ``finalize=False`` mirrors :meth:`rerun_incremental`'s fast path: it
         skips the reference-accuracy ``_finalize`` evaluation and returns
@@ -957,7 +1019,8 @@ class FastAssociationEngine:
 
     def run_tiered(self, init: str = "nearest", *,
                    tiers: str | tuple[str, ...] = "two_tier",
-                   max_moves: int = 10_000, exchange_samples: int = 64,
+                   max_moves: int = 10_000,
+                   exchange_samples: int = DEFAULT_EXCHANGE_SAMPLES,
                    tier_rel_tols: tuple[float, ...] | None = None,
                    assignment: np.ndarray | None = None) -> AssociationResult:
         """Two-tier (or n-tier) descent: drive each profile of ``tiers`` to
@@ -1002,7 +1065,8 @@ class FastAssociationEngine:
         return self._finalize(assignment, member, total_moves, trace)
 
     def rerun_incremental(self, sc_new: Scenario, delta: ScenarioDelta, *,
-                          max_moves: int = 10_000, exchange_samples: int = 0,
+                          max_moves: int = 10_000,
+                          exchange_samples: int = DEFAULT_EXCHANGE_SAMPLES,
                           verify: bool = False, finalize: bool = True):
         """Re-converge after a :func:`repro.core.scenario.perturb_scenario`
         step WITHOUT rebuilding the expensive static state.
@@ -1026,7 +1090,11 @@ class FastAssociationEngine:
         ``sc_new`` and descended from the same repaired assignment, and the
         two stable points must match bit-identically (raises otherwise).
         It re-pays the full rebuild, so it is for tests/benchmarks, not for
-        the hot path.
+        the hot path. The parity holds with ``exchange_samples > 0`` (the
+        :data:`DEFAULT_EXCHANGE_SAMPLES` default): both sides descend from
+        the same repaired assignment, bitwise-equal caches and the same
+        ``PRNGKey(seed)`` stream, so they draw and apply the same escape
+        moves.
 
         ``finalize=False`` is the non-verifying fast path for per-round use
         (the live co-simulation's hot loop): it skips the reference-accuracy
@@ -1203,16 +1271,12 @@ class FastAssociationEngine:
                 exchange_samples=exchange_samples,
                 ra_backend=self.ra_backend)
         else:
-            if exchange_samples:
-                raise ValueError(
-                    "sharded engines require exchange_samples=0: sampled "
-                    "exchanges touch arbitrary server pairs and are not "
-                    "distributed")
             runner = _sharded_runner(
                 self._mesh, len(self._buckets), warm is not None,
                 kind=self.kind, profile=profile, permission=self.permission,
                 min_residual=self.min_residual, max_moves=max_moves,
-                exchange_samples=0, ra_backend=self.ra_backend)
+                exchange_samples=exchange_samples,
+                ra_backend=self.ra_backend)
             member, assign, cur, toggles, moves, trace = runner(*args)
         member_np = np.asarray(member)
         self.last_state = {"member": member_np,

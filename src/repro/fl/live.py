@@ -94,7 +94,8 @@ from dataclasses import dataclass, field
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.assoc_fast import (FastAssociationEngine,
+from repro.core.assoc_fast import (DEFAULT_EXCHANGE_SAMPLES,
+                                   FastAssociationEngine,
                                    assignment_true_cost, repair_assignment)
 from repro.core.edge_association import (GroupSolver, NoFeasibleServerError,
                                          greedy_admission)
@@ -199,7 +200,8 @@ class LiveHFELRunner:
                  kind: str = "fast", profile: str = "coarse",
                  rel_tol: float = 1e-3, compact: bool | str = "auto",
                  shards: int | None = None, ra_backend: str = "xla",
-                 max_moves: int = 10_000, exchange_samples: int = 0,
+                 max_moves: int = 10_000,
+                 exchange_samples: int = DEFAULT_EXCHANGE_SAMPLES,
                  verify: bool = False, overflow_max: int = 64,
                  bridge: DeviceClientBridge | None = None):
         if policy not in POLICIES:
@@ -237,12 +239,6 @@ class LiveHFELRunner:
         self.profile = profile
         self.rel_tol = rel_tol
         self.compact = compact
-        # sharded-sweep engines require the deterministic no-exchange path
-        # (the PR-6 contract); fail at construction, not mid-run
-        if shards is not None and exchange_samples != 0:
-            raise ValueError(
-                "shards= engines run the deterministic sweep only — "
-                "set exchange_samples=0")
         self.shards = shards
         self.ra_backend = ra_backend
         self.max_moves = max_moves
@@ -494,7 +490,8 @@ def run_live(sc: Scenario, ds: FederatedDataset, *,
              kind: str = "fast", profile: str = "coarse",
              rel_tol: float = 1e-3, compact: bool | str = "auto",
              shards: int | None = None, ra_backend: str = "xla",
-             max_moves: int = 10_000, exchange_samples: int = 0,
+             max_moves: int = 10_000,
+             exchange_samples: int = DEFAULT_EXCHANGE_SAMPLES,
              verify: bool = False, overflow_max: int = 64,
              bridge: DeviceClientBridge | None = None) -> LiveHistory:
     """Run one live HFEL co-simulation end-to-end; returns its
@@ -511,6 +508,15 @@ def run_live(sc: Scenario, ds: FederatedDataset, *,
     build (round-0, periodic-cold rebuilds, the warm engine), so the live
     loop can run the PR-6 sharded sweep; the sharded path keeps the
     bit-identical-assignment contract, hence identical histories.
+
+    ``exchange_samples`` defaults to
+    :data:`repro.core.assoc_fast.DEFAULT_EXCHANGE_SAMPLES` (= 64), the SAME
+    default as ``FastAssociationEngine.run`` — live runs no longer silently
+    drop the Definition-5 escape moves — and is legal under ``shards=p``
+    (the sampled-exchange pass is distributed with a bit-identical winner
+    merge). Warm/cold swap parity holds with exchanges on: both policies
+    descend from the same repaired assignment with the same
+    ``PRNGKey(seed)`` stream. Pass 0 for transfer-only descent.
 
     On a capacitated scenario (``sc.max_devices`` set), arrivals the edges
     cannot admit wait in a FIFO queue bounded by ``overflow_max`` (see

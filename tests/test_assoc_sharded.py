@@ -175,12 +175,71 @@ def test_pallas_backend_engine_matches_xla():
     assert pal.total_cost == pytest.approx(xla.total_cost, rel=2e-4)
 
 
-def test_sharded_rejects_exchanges():
-    sc = make_scenario(14, 3, seed=0, reach_m=300.0)
-    eng = FastAssociationEngine(sc, kind="fast", seed=0, compact="bucketed",
-                                shards=1)
-    with pytest.raises(ValueError, match="exchange"):
-        eng.run("nearest", exchange_samples=4)
+# The PR-10 contract matrix: sharded stable points AND per-move traces are
+# bit-identical to the single-device engine across every sweep space ×
+# shard count × exchange setting. The (16, 4, seed=1) geometry is the one
+# the exchange tests pin (transfers alone stall short of the exchange-on
+# stable point, so the escape path genuinely fires).
+EXCHANGE_MATRIX = [(c, p, s)
+                   for c in ("bucketed", True, False)
+                   for p in (1, 3, 4)
+                   for s in (0, 64)]
+
+
+@pytest.mark.parametrize(
+    "compact,shards,samples", EXCHANGE_MATRIX,
+    ids=[f"{'dense' if c is False else 'flat' if c is True else c}"
+         f"-p{p}-ex{s}" for c, p, s in EXCHANGE_MATRIX])
+def test_sharded_exchange_parity_matrix(compact, shards, samples):
+    """Distributed sampled exchanges (PR 10): the replicated pair proposal +
+    chunk-partitioned pricing + all_gather (delta, sample-order) winner fold
+    must reproduce the single-device exchange sequence bit-for-bit — same
+    assignment, same move count, same per-move cost trace."""
+    if shards > N_DEV:
+        pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_device_count")
+    sc = make_scenario(16, 4, seed=1, reach_m=300.0)
+    classic = FastAssociationEngine(sc, kind="fast", seed=0,
+                                    compact=compact).run(
+        "nearest", exchange_samples=samples)
+    sharded = FastAssociationEngine(sc, kind="fast", seed=0, compact=compact,
+                                    shards=shards).run(
+        "nearest", exchange_samples=samples)
+    assert np.array_equal(classic.assignment, sharded.assignment)
+    assert classic.n_adjustments == sharded.n_adjustments
+    assert classic.cost_trace == sharded.cost_trace  # per-move, bitwise
+    if samples:
+        # the geometry guarantees the exchange branch fires: with exchanges
+        # the descent moves strictly beyond the transfers-only stable point
+        no_ex = FastAssociationEngine(sc, kind="fast", seed=0,
+                                      compact=compact).run(
+            "nearest", exchange_samples=0)
+        assert classic.n_adjustments > no_ex.n_adjustments
+        assert classic.total_cost < no_ex.total_cost * (1 - 1e-5)
+
+
+@pytest.mark.slow
+@multi_device
+def test_sharded_warm_rerun_parity_with_exchanges():
+    """The warm path carries the lifted restriction too: a sharded
+    rerun_incremental with exchange_samples>0 matches the classic warm rerun
+    bit-identically AND passes its own verify gate (cold rebuild from the
+    same repaired assignment, exchanges on)."""
+    sc = make_large_scenario(120, 6, seed=5)
+    classic = FastAssociationEngine(sc, kind="fast", seed=0,
+                                    profile="coarse", compact="bucketed")
+    classic.run("nearest", exchange_samples=64)
+    sharded = FastAssociationEngine(sc, kind="fast", seed=0,
+                                    profile="coarse", compact="bucketed",
+                                    shards=N_DEV)
+    sharded.run("nearest", exchange_samples=64)
+    sc2, delta = perturb_scenario(sc, seed=6, drift_m=60.0, move_frac=0.05,
+                                  flip_frac=0.02, depart_frac=0.02)
+    warm_c = classic.rerun_incremental(sc2, delta, exchange_samples=64)
+    warm_s = sharded.rerun_incremental(sc2, delta, exchange_samples=64,
+                                       verify=True)
+    assert np.array_equal(warm_c.assignment, warm_s.assignment)
+    assert warm_c.n_adjustments == warm_s.n_adjustments
+    assert warm_c.cost_trace == warm_s.cost_trace
 
 
 def test_sharded_constructor_validation():

@@ -178,6 +178,38 @@ def test_live_hfel_section_keys_expected_new(monkeypatch, tmp_path, capsys):
     assert "REGRESSION" in capsys.readouterr().out
 
 
+def test_exchange_and_sharded_live_keys_expected_new(monkeypatch, tmp_path,
+                                                     capsys):
+    """The PR-10 distributed-exchange timings — sharded exchange parity
+    probes in assoc_scale and the N=50k sharded live round — read as
+    intentional one-sided tolerance on their first comparison."""
+    rc = _run(monkeypatch, tmp_path,
+              {"assoc_scale": {"timings": {"shared": 1.0,
+                                           "exchange_parity_n2000_k40": 6.0}},
+               "live_hfel": {"timings": {
+                   "sharded_live_warm_n50000_k500": 400.0},
+                   "device_counts": {
+                       "sharded_live_warm_n50000_k500": 4}}},
+              {"assoc_scale": {"timings": {"shared": 1.0}}})
+    out = capsys.readouterr().out
+    assert rc == 0
+    expected_line = [l for l in out.splitlines()
+                     if l.startswith("expected new timings")]
+    assert len(expected_line) == 1
+    assert "exchange_parity_n2000_k40" in expected_line[0]
+    assert "sharded_live_warm_n50000_k500" in expected_line[0]
+    # re-measured at a different device count: incomparable, never compared
+    rc = _run(monkeypatch, tmp_path,
+              {"live_hfel": {"timings": {
+                  "sharded_live_warm_n50000_k500": 900.0},
+                  "device_counts": {"sharded_live_warm_n50000_k500": 2}}},
+              {"live_hfel": {"timings": {
+                  "sharded_live_warm_n50000_k500": 400.0},
+                  "device_counts": {"sharded_live_warm_n50000_k500": 4}}})
+    out = capsys.readouterr().out
+    assert rc == 0 and "incomparable, skipped" in out
+
+
 def test_missing_current_fails(monkeypatch, tmp_path, capsys):
     rc = _run(monkeypatch, tmp_path, None, {"s": {"timings": {"k": 1.0}}})
     assert rc == 1

@@ -282,6 +282,86 @@ def test_hfel006_passes_donation_small_signatures_and_statics():
     assert "HFEL006" not in rules_of(good)
 
 
+# -- HFEL007: replicated PRNG keys under shard_map ---------------------------
+
+def test_hfel007_flags_replicated_split_and_fold_in_under_shard_map():
+    """The exact hazard the distributed-exchange design dodges: splitting a
+    key inside a shard_map'd body advances the SAME stream on every shard
+    unless the mesh position is folded in."""
+    bad = lint("""
+        import jax
+        from functools import partial
+        from jax.experimental.shard_map import shard_map
+
+        def impl(member, key, *, axis, kind):
+            key, sub = jax.random.split(key)
+            key2 = jax.random.fold_in(key, 3)
+            return member + jax.random.uniform(sub, member.shape)
+
+        def build(mesh):
+            body = partial(impl, axis="i", kind="fast")
+            return jax.jit(shard_map(body, mesh=mesh, in_specs=(),
+                                     out_specs=()))
+    """)
+    assert rules_of(bad) == ["HFEL007", "HFEL007"]
+    # the same split under plain jit (no mesh axis) is NOT a hazard
+    plain = lint("""
+        import jax
+
+        @jax.jit
+        def f(key, x):
+            key, sub = jax.random.split(key)
+            return x + jax.random.uniform(sub, x.shape)
+    """)
+    assert plain == []
+
+
+def test_hfel007_allows_axis_index_folds_and_array_split():
+    good = lint("""
+        import jax
+        from jax import lax
+        from functools import partial
+        from jax.experimental.shard_map import shard_map
+        import jax.numpy as jnp
+
+        def impl(member, key, *, axis):
+            # folding the mesh position in diversifies the stream...
+            key = jax.random.fold_in(key, lax.axis_index(axis))
+            # ...and everything derived from it stays diversified
+            key, sub = jax.random.split(key)
+            halves = jnp.split(member, 2)       # array split, not the PRNG
+            return halves[0] + jax.random.uniform(sub, halves[0].shape)
+
+        def build(mesh):
+            body = partial(impl, axis="i")
+            return jax.jit(shard_map(body, mesh=mesh, in_specs=(),
+                                     out_specs=()))
+    """)
+    assert good == []
+
+
+def test_hfel007_pragma_documents_deliberate_replication():
+    """The distributed-exchange idiom: the pair proposal is replicated ON
+    PURPOSE, and the pragma (with its mandatory justification) records
+    that."""
+    good = lint("""
+        import jax
+        from functools import partial
+        from jax.experimental.shard_map import shard_map
+
+        def impl(member, key, *, axis):
+            # hfellint: disable=HFEL007 -- replicated-key by design
+            key, sub = jax.random.split(key)
+            return member + jax.random.uniform(sub, member.shape)
+
+        def build(mesh):
+            body = partial(impl, axis="i")
+            return jax.jit(shard_map(body, mesh=mesh, in_specs=(),
+                                     out_specs=()))
+    """)
+    assert good == []
+
+
 def test_syntax_error_is_a_finding_not_a_crash():
     out = lint("def broken(:\n    pass\n")
     assert rules_of(out) == ["HFEL000"]

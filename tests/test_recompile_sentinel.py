@@ -34,16 +34,21 @@ CHURN = dict(drift_m=60.0, move_frac=0.1, flip_frac=0.05, depart_frac=0.05)
 RUN_DEVICE_BUDGET = 2
 
 
-def _cycle(compact, shards=None, cap_slack=None) -> np.ndarray:
+def _cycle(compact, shards=None, cap_slack=None,
+           exchange_samples=0) -> np.ndarray:
     """cold run -> one churn tick -> warm incremental rerun; returns the
-    warm stable point. Deterministic: fixed seeds, exchange_samples=0."""
+    warm stable point. Deterministic: fixed seeds (the sampled-exchange
+    stream is itself seed-derived, so exchange_samples>0 stays bitwise
+    repeatable)."""
     sc = make_large_scenario(N, K, seed=0, cap_slack=cap_slack)
     eng = FastAssociationEngine(sc, kind="fast", seed=0, profile="coarse",
                                 rel_tol=1e-3, compact=compact, shards=shards)
-    eng.run("nearest", max_moves=3, exchange_samples=0, finalize=False)
+    eng.run("nearest", max_moves=3, exchange_samples=exchange_samples,
+            finalize=False)
     sc2, delta = perturb_scenario(sc, seed=1, **CHURN)
     return np.asarray(eng.rerun_incremental(
-        sc2, delta, max_moves=3, exchange_samples=0, finalize=False))
+        sc2, delta, max_moves=3, exchange_samples=exchange_samples,
+        finalize=False))
 
 
 @pytest.mark.parametrize("compact", [False, True, "bucketed"],
@@ -105,3 +110,34 @@ def test_sharded_runner_cache_hits_and_bypass_is_caught(compile_log,
         "bypassing _SHARDED_CACHE produced no compile events — the "
         "recompilation sentinel lost its signal")
     np.testing.assert_array_equal(first, third)
+
+
+def test_sharded_exchange_cycle_compile_budget_and_cache_key(compile_log):
+    """PR 10 lifts the sharded exchange_samples=0 restriction; the compile
+    contract extends with it: ``exchange_samples`` is ONE static on the
+    sharded program, so after the no-exchange programs are warm a sharded
+    exchange cycle compiles at most the cold-init + warm-init variants of
+    the new static, an IDENTICAL repeat compiles nothing, and the
+    ``_SHARDED_CACHE`` key carries the exchange static explicitly (distinct
+    budgets must never collide on one compiled program)."""
+    _cycle("bucketed", shards=1)            # warm the no-exchange programs
+    compile_log.reset()
+    first = _cycle("bucketed", shards=1, exchange_samples=8)
+    n = len(compile_log.events)
+    assert n <= RUN_DEVICE_BUDGET, (
+        f"sharded exchange cycle compiled {n} programs on warm no-exchange "
+        f"caches (budget {RUN_DEVICE_BUDGET}: cold-init + warm-init variants "
+        "of the exchange_samples=8 static) — something besides the exchange "
+        "static leaked into the traced signature")
+    compile_log.reset()
+    second = _cycle("bucketed", shards=1, exchange_samples=8)
+    assert compile_log.events == [], (
+        f"repeat sharded exchange cycle recompiled {compile_log.events} — "
+        "_SHARDED_CACHE missed on an identical key with exchanges on")
+    np.testing.assert_array_equal(first, second)
+    # the cache key includes the exchange static (position pinned by
+    # _sharded_runner): both the 0- and 8-sample programs are resident
+    budgets = {key[-2] for key in assoc_fast._SHARDED_CACHE}
+    assert {0, 8} <= budgets, (
+        f"_SHARDED_CACHE keys carry exchange budgets {budgets} — expected "
+        "distinct entries for exchange_samples=0 and =8")

@@ -329,6 +329,60 @@ def test_reference_engine_active_parity_on_churn_scenario():
     assert np.isfinite(ref.true_cost)
 
 
+@pytest.mark.slow
+def test_exchanges_never_move_inactive_and_respect_binding_caps():
+    """PR-10 satellite regression. ``do_exchange`` samples device pairs
+    uniformly from ``[0, n)`` with no explicit active gate — the only thing
+    standing between a parked device and an escape move is ``can_join``'s
+    ``ex_bucket.ok`` mask, which is derived from ``eff_avail`` (active-
+    masked) in every sweep space. Pin that, plus cap-neutrality: exchanges
+    are 1-for-1 swaps, so per-server loads are unchanged by construction and
+    a binding ``capacity`` can never be violated by the escape path.
+
+    Transfers only ever move active devices (sweep rows are active-masked
+    at bucket build time) and both runs share the same init, so any
+    divergence at an inactive index would implicate an exchange."""
+    sc = make_scenario(16, 4, seed=1, reach_m=300.0, cap_slack=1.2)
+    sc1, _ = perturb_scenario(sc, seed=2, move_frac=0.0, depart_frac=0.25)
+    dead = np.flatnonzero(~sc1.active_mask)
+    assert dead.size > 0 and sc1.capacity is not None
+
+    def cold(samples):
+        return FastAssociationEngine(
+            sc1, kind="fast", seed=0, compact="bucketed").run(
+            "nearest", exchange_samples=samples)
+
+    no_ex, ex = cold(0), cold(64)
+    assert ex.n_adjustments > no_ex.n_adjustments  # escape path fired
+    np.testing.assert_array_equal(ex.assignment[dead],
+                                  no_ex.assignment[dead])
+    load = np.bincount(ex.assignment[sc1.active_mask],
+                       minlength=sc1.n_servers)
+    assert (load <= sc1.capacity).all()
+    assert (load == sc1.capacity).any()  # the caps genuinely bind
+
+    # the churn-tick warm path carries the same contract: identical prior
+    # engines, one rerun transfer-only and one with exchanges, both under
+    # the verify (cold-rebuild parity) gate
+    sc2, d2 = perturb_scenario(sc1, seed=3, drift_m=60.0, move_frac=0.2,
+                               flip_frac=0.1, depart_frac=0.15,
+                               arrive_frac=0.3)
+    dead2 = np.flatnonzero(~sc2.active_mask)
+    assert dead2.size > 0
+    warms = []
+    for samples in (0, 64):
+        eng = FastAssociationEngine(sc1, kind="fast", seed=0,
+                                    compact="bucketed")
+        eng.run("nearest", exchange_samples=64)
+        warms.append(eng.rerun_incremental(sc2, d2, exchange_samples=samples,
+                                           verify=True))
+    np.testing.assert_array_equal(warms[1].assignment[dead2],
+                                  warms[0].assignment[dead2])
+    wload = np.bincount(warms[1].assignment[sc2.active_mask],
+                        minlength=sc2.n_servers)
+    assert (wload <= sc2.capacity).all()
+
+
 def test_churn_scenario_cold_run_excludes_inactive():
     """A fresh engine on a churn scenario must park inactive devices with
     zero cost contribution: dropping them entirely from the scenario yields
